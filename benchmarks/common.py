@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing. Each bench module exposes run() -> rows of
+(name, us_per_call, derived) where `derived` is the paper-facing number
+(a loss, an accuracy, a ratio ...) as a string."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
+    """Returns (result, us_per_call)."""
+    result = None
+    for _ in range(warmup):
+        result = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        result = fn(*args)
+    dt = (time.perf_counter() - t0) / repeats
+    return result, dt * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,59 @@
+"""Paper Fig. 2: training convergence of FedSGD, FedAVG, Reptile
+(batched & serial), and TinyReptile on the Sine-wave example.
+derived = query MSE after adaptation at equal client-visit budget."""
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.paper_models import SINE_MLP
+from repro.core import (fedavg_train, reptile_train, tinyreptile_train)
+from repro.core.fedavg import fedsgd_train
+from repro.data import SineTasks
+from repro.models.paper_nets import init_paper_model, paper_model_loss
+
+LOSS = functools.partial(paper_model_loss, SINE_MLP)
+EVAL = dict(num_tasks=10, support=8, k_steps=8, lr=0.02, query=64)
+VISITS = 300  # client visits for every algorithm (fair budget)
+
+
+def run():
+    params = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
+    dist = SineTasks()
+    rows = []
+
+    def final(out):
+        return f"mse={out['history'][-1]['query_loss']:.3f}"
+
+    out, us = timed(lambda: tinyreptile_train(
+        LOSS, params, dist, rounds=VISITS, alpha=1.0, beta=0.02, support=32,
+        eval_every=VISITS, eval_kwargs=EVAL, seed=2), repeats=1, warmup=0)
+    rows.append(("fig2/tinyreptile", us / VISITS, final(out)))
+
+    out, us = timed(lambda: reptile_train(
+        LOSS, params, dist, rounds=VISITS, alpha=1.0, beta=0.02, support=32,
+        epochs=8, clients_per_round=1, eval_every=VISITS, eval_kwargs=EVAL,
+        seed=2), repeats=1, warmup=0)
+    rows.append(("fig2/reptile_serial", us / VISITS, final(out)))
+
+    out, us = timed(lambda: reptile_train(
+        LOSS, params, dist, rounds=VISITS // 5, alpha=1.0, beta=0.02,
+        support=32, epochs=8, clients_per_round=5, eval_every=VISITS // 5,
+        eval_kwargs=EVAL, seed=2), repeats=1, warmup=0)
+    rows.append(("fig2/reptile_batched", us / (VISITS // 5), final(out)))
+
+    out, us = timed(lambda: fedavg_train(
+        LOSS, params, dist, rounds=VISITS // 5, beta=0.02, support=32,
+        epochs=8, clients_per_round=5, eval_every=VISITS // 5,
+        eval_kwargs=EVAL, seed=2), repeats=1, warmup=0)
+    rows.append(("fig2/fedavg", us / (VISITS // 5),
+                 final(out) + " (fails: no adaptation objective)"))
+
+    out, us = timed(lambda: fedsgd_train(
+        LOSS, params, dist, rounds=VISITS // 5, beta=0.02, support=32,
+        clients_per_round=5, eval_every=VISITS // 5, eval_kwargs=EVAL,
+        seed=2), repeats=1, warmup=0)
+    rows.append(("fig2/fedsgd", us / (VISITS // 5),
+                 final(out) + " (fails)"))
+    return rows

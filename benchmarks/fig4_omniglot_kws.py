@@ -1,0 +1,51 @@
+"""Paper Fig. 4: Reptile (batched & serial) vs TinyReptile on Omniglot
+(5-way) and Keywords spotting (4-way). derived = query accuracy after
+adaptation (chance: 20% / 25%)."""
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.paper_models import KWS_CONV, OMNIGLOT_CONV
+from repro.core import reptile_train, tinyreptile_train
+from repro.data import KWSTasks, OmniglotTasks
+from repro.models.paper_nets import (init_paper_model, paper_model_accuracy,
+                                     paper_model_loss)
+
+ROUNDS = 120
+
+
+def _bench(name, cfg, dist, rows):
+    loss = functools.partial(paper_model_loss, cfg)
+    acc = functools.partial(paper_model_accuracy, cfg)
+    ev = dict(num_tasks=6, support=16, k_steps=8, lr=0.01, query=32,
+              metric_fn=acc)
+    params = init_paper_model(cfg, jax.random.PRNGKey(0))
+
+    out, us = timed(lambda: tinyreptile_train(
+        loss, params, dist, rounds=ROUNDS, alpha=1.0, beta=0.01, support=16,
+        eval_every=ROUNDS, eval_kwargs=ev, seed=4), repeats=1, warmup=0)
+    rows.append((f"fig4/{name}_tinyreptile", us / ROUNDS,
+                 f"acc={out['history'][-1]['query_metric']:.2%}"))
+
+    out, us = timed(lambda: reptile_train(
+        loss, params, dist, rounds=ROUNDS, alpha=1.0, beta=0.01, support=16,
+        epochs=8, eval_every=ROUNDS, eval_kwargs=ev, seed=4),
+        repeats=1, warmup=0)
+    rows.append((f"fig4/{name}_reptile_serial", us / ROUNDS,
+                 f"acc={out['history'][-1]['query_metric']:.2%}"))
+
+    out, us = timed(lambda: reptile_train(
+        loss, params, dist, rounds=ROUNDS // 4, alpha=1.0, beta=0.01,
+        support=16, epochs=8, clients_per_round=4,
+        eval_every=ROUNDS // 4, eval_kwargs=ev, seed=4), repeats=1, warmup=0)
+    rows.append((f"fig4/{name}_reptile_batched", us / (ROUNDS // 4),
+                 f"acc={out['history'][-1]['query_metric']:.2%}"))
+
+
+def run():
+    rows = []
+    _bench("omniglot5", OMNIGLOT_CONV, OmniglotTasks(), rows)
+    _bench("kws4", KWS_CONV, KWSTasks(), rows)
+    return rows

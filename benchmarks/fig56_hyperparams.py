@@ -1,0 +1,47 @@
+"""Paper Appendix A (Figs. 5-6): hyperparameter recipe.
+
+Fig. 5: client LR beta x training support size S_training.
+Fig. 6: testing support size S_testing (0 -> no adaptation; the paper
+shows even ONE sample helps dramatically).
+derived = query MSE on sine."""
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.paper_models import SINE_MLP
+from repro.core import evaluate_init, tinyreptile_train
+from repro.data import SineTasks
+from repro.models.paper_nets import init_paper_model, paper_model_loss
+
+LOSS = functools.partial(paper_model_loss, SINE_MLP)
+ROUNDS = 200
+
+
+def run():
+    params = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
+    dist = SineTasks()
+    rows = []
+    ev = dict(num_tasks=8, support=8, k_steps=8, lr=0.02, query=64)
+
+    # Fig. 5: beta x S_training grid
+    for beta in (0.002, 0.01, 0.02):
+        for s_train in (8, 32):
+            out, us = timed(lambda b=beta, s=s_train: tinyreptile_train(
+                LOSS, params, dist, rounds=ROUNDS, alpha=1.0, beta=b,
+                support=s, eval_every=ROUNDS, eval_kwargs=ev, seed=5),
+                repeats=1, warmup=0)
+            rows.append((f"fig5/beta{beta}_S{s_train}", us / ROUNDS,
+                         f"mse={out['history'][-1]['query_loss']:.3f}"))
+
+    # Fig. 6: S_testing sweep on one trained init
+    trained = tinyreptile_train(LOSS, params, dist, rounds=ROUNDS, alpha=1.0,
+                                beta=0.02, support=32, seed=5)["params"]
+    for s_test in (0, 1, 2, 4, 8, 16):
+        e = evaluate_init(LOSS, trained, dist, np.random.default_rng(9),
+                          num_tasks=10, support=s_test, k_steps=8, lr=0.02,
+                          query=64)
+        rows.append((f"fig6/S_test{s_test}", 0.0,
+                     f"mse={e['query_loss']:.3f}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Roofline table: reads the dry-run sweep artifacts (results/dryrun/)
+and emits per-(arch x shape x mesh): compute / memory / collective terms,
+the dominant bottleneck, and the useful-FLOPs ratio. derived column is
+the dominant term + its seconds."""
+import glob
+import json
+import os
+
+
+def run(outdir="results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        name = f"roofline/{d['arch']}__{d['shape']}__{d.get('mesh','?')}"
+        if d.get("status") == "SKIP":
+            rows.append((name, 0.0, f"SKIP({d.get('reason','')[:50]})"))
+            continue
+        if d.get("status") != "OK":
+            rows.append((name, 0.0, f"{d.get('status')}"))
+            continue
+        r = d.get("roofline", {})
+        dom = r.get("dominant", "?")
+        rows.append((
+            name, 0.0,
+            f"dom={dom}:{r.get(dom, 0):.4f}s "
+            f"compute={r.get('compute_s', 0):.4f} "
+            f"memory={r.get('memory_s', 0):.4f} "
+            f"collective={r.get('collective_s', 0):.4f} "
+            f"useful={d.get('useful_ratio', 0):.3f}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "no sweep artifacts; run python -m repro.launch.sweep"))
+    return rows

@@ -1,0 +1,17 @@
+"""Paper Table II: memory requirement, Reptile vs TinyReptile (S=32).
+derived = modelled bytes + reduction factor (paper claims >= 2x)."""
+from repro.configs.paper_models import PAPER_MODELS
+from repro.metering import algorithm_memory_report
+
+
+def run():
+    rows = []
+    for name, cfg in PAPER_MODELS.items():
+        r = algorithm_memory_report(cfg, support=32)
+        rows.append((
+            f"table2/{name}", 0.0,
+            f"reptile_kb={r['reptile_bytes']/1024:.1f} "
+            f"tiny_kb={r['tinyreptile_bytes']/1024:.1f} "
+            f"reduction={r['reduction_factor']:.1f}x "
+            f"arduino_ok={r['fits_arduino_256kb_tinyreptile']}"))
+    return rows

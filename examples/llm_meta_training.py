@@ -1,0 +1,70 @@
+"""TinyReptile at framework scale: federated meta-training of a (reduced)
+assigned architecture over heterogeneous LM clients, then serving it.
+
+Uses the same public API the production launchers use:
+  - repro.runtime.steps.make_meta_train_step  (the paper's round as a step)
+  - repro.models.build_model                  (any --arch)
+  - repro.checkpoint                          (save/restore)
+
+  PYTHONPATH=src python examples/llm_meta_training.py [arch]
+"""
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_arch
+from repro.data import LMClientStream
+from repro.models import build_model
+from repro.runtime.steps import make_meta_train_step, microbatch
+
+ARCH = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
+ROUNDS, BATCH, SEQ, K = 30, 8, 64, 4
+
+
+def main():
+    cfg = get_arch(ARCH).reduced()
+    model = build_model(cfg)
+    phi = model.init(jax.random.PRNGKey(0))
+    clients = [LMClientStream(cfg.vocab_size, cid) for cid in range(16)]
+    step = jax.jit(make_meta_train_step(model, beta=0.02, alpha=1.0),
+                   donate_argnums=(0,))
+    rng = np.random.default_rng(0)
+
+    first = last = None
+    for rnd in range(ROUNDS):
+        client = clients[int(rng.integers(len(clients)))]
+        batch = jax.tree.map(jnp.asarray, client.batch(rng, BATCH, SEQ))
+        phi, m = step(phi, microbatch(batch, K))
+        if rnd == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+        if rnd % 10 == 0:
+            print(f"round {rnd:3d}  loss {float(m['loss']):.3f}  "
+                  f"(inner {float(m['inner_first']):.3f} -> "
+                  f"{float(m['inner_last']):.3f})")
+    print(f"meta-training: {first:.3f} -> {last:.3f}")
+    assert last < first, "meta loss should improve"
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, phi, ROUNDS, extra={"arch": ARCH})
+        phi2, rnd, extra = restore_checkpoint(d, phi)
+        print(f"checkpoint round-trip ok (round {rnd}, {extra})")
+
+    # serve a few greedy tokens from the meta-learned init
+    cache = model.init_cache(1, 32)
+    tok = jnp.asarray([[1]], jnp.int32)
+    outs = []
+    for t in range(8):
+        logits, cache = jax.jit(model.decode_fn)(
+            phi, {"tokens": tok, "cache": cache, "cache_len": jnp.int32(t)})
+        tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+        outs.append(int(tok[0, 0]))
+    print("greedy sample:", outs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Pytree checkpointing to .npz (offline container: no orbax).
+
+Leaves are stored under their tree paths; restore validates structure
+against a template pytree. Supports step-tagged files + a LATEST pointer,
+atomic writes (tmp + rename) — enough substrate for real training loops.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.runtime.sharding import _path_str
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {(_path_str(path) or f"leaf{i}"): np.asarray(leaf)
+            for i, (path, leaf) in enumerate(leaves)}
+
+
+def save_checkpoint(directory: str, tree: Any, step: int,
+                    extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __step__=step,
+                 __extra__=json.dumps(extra or {}), **flat)
+    os.replace(tmp, path)
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(os.path.basename(path))
+    return path
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    marker = os.path.join(directory, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        return os.path.join(directory, f.read().strip())
+
+
+def restore_checkpoint(directory_or_file: str, template: Any):
+    """Returns (tree, step, extra). Template provides structure/dtypes."""
+    path = directory_or_file
+    if os.path.isdir(path):
+        path = latest_checkpoint(path)
+        if path is None:
+            raise FileNotFoundError(f"no checkpoint in {directory_or_file}")
+    data = np.load(path, allow_pickle=False)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    out = []
+    for i, (p, leaf) in enumerate(leaves_with_path):
+        key = _path_str(p) or f"leaf{i}"
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+        out.append(arr.astype(np.asarray(leaf).dtype))
+    step = int(data["__step__"])
+    extra = json.loads(str(data["__extra__"]))
+    return jax.tree_util.tree_unflatten(treedef, out), step, extra

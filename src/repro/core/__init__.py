@@ -1,0 +1,6 @@
+"""The paper's contribution: TinyReptile + every baseline it compares to."""
+from repro.core.fedavg import fedavg_train, fedsgd_train  # noqa: F401
+from repro.core.meta import evaluate_init, finetune_batch, finetune_online  # noqa: F401
+from repro.core.reptile import reptile_train  # noqa: F401
+from repro.core.tinyreptile import tinyreptile_train  # noqa: F401
+from repro.core.transfer import transfer_train  # noqa: F401

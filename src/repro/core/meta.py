@@ -1,0 +1,85 @@
+"""Meta-learning substrate shared by all core/ algorithms.
+
+Implements the paper's evaluation protocol (§III-A): to score an
+initialization phi, fine-tune it for K steps on each testing client's
+support set S, then measure loss/accuracy on the query set Q, averaged
+over clients — Eq. (1): L(phi) = sum_n l_n(phi_n^k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tasks import TaskDistribution
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_add_scaled(a, b, scale):
+    return jax.tree.map(lambda x, y: x + scale * y, a, b)
+
+
+def tree_lerp(phi, phi_hat, alpha):
+    """Reptile interpolation: phi + alpha (phi_hat - phi)."""
+    return jax.tree.map(lambda p, q: p + alpha * (q - p), phi, phi_hat)
+
+
+def tree_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def finetune_batch(loss_fn, params, batch, steps: int, lr):
+    """K steps of full-batch gradient descent on one support set
+    (Reptile's inner loop / the evaluation fine-tune)."""
+    def body(p, _):
+        loss, g = jax.value_and_grad(loss_fn)(p, batch)
+        return jax.tree.map(lambda w, gg: w - lr * gg, p, g), loss
+    params, losses = jax.lax.scan(body, params, None, length=steps)
+    return params, losses
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def finetune_online(loss_fn, params, xs, ys, lr):
+    """One SGD step per sample, in arrival order (TinyReptile inner loop).
+    xs: (S, ...), ys: (S, ...) — scanned one at a time; a real device
+    would never materialize the stream, here it's scanned for jit."""
+    def body(p, xy):
+        x, y = xy
+        batch = {"x": x[None], "y": y[None]}
+        loss, g = jax.value_and_grad(loss_fn)(p, batch)
+        return jax.tree.map(lambda w, gg: w - lr * gg, p, g), loss
+    params, losses = jax.lax.scan(body, params, (xs, ys))
+    return params, losses
+
+
+def evaluate_init(loss_fn: Callable, params, task_dist: TaskDistribution,
+                  rng: np.random.Generator, *, num_tasks: int = 10,
+                  support: int = 8, query: int = 64, k_steps: int = 8,
+                  lr: float = 0.01,
+                  metric_fn: Optional[Callable] = None) -> Dict[str, float]:
+    """Paper protocol: per testing client, fine-tune K steps on S then
+    score on Q; average over clients."""
+    losses, metrics = [], []
+    for _ in range(num_tasks):
+        task = task_dist.sample_task(rng)
+        qry = task.query_batch(rng, query)
+        if support > 0:
+            sup = task.support_batch(rng, support)
+            tuned, _ = finetune_batch(loss_fn, params, sup, k_steps,
+                                      jnp.float32(lr))
+        else:
+            tuned = params  # S_test = 0: no adaptation (paper Fig. 6)
+        losses.append(float(loss_fn(tuned, qry)))
+        if metric_fn is not None:
+            metrics.append(float(metric_fn(tuned, qry)))
+    out = {"query_loss": float(np.mean(losses))}
+    if metrics:
+        out["query_metric"] = float(np.mean(metrics))
+    return out

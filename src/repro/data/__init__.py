@@ -1,0 +1,3 @@
+from repro.data.tasks import (KWSTasks, OmniglotTasks, SineTasks,  # noqa: F401
+                              TaskDistribution)
+from repro.data.lm import LMClientStream  # noqa: F401

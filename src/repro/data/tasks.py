@@ -1,0 +1,167 @@
+"""Meta-learning task distributions (streaming, deterministic, offline).
+
+The paper's three benchmarks:
+- Sine-wave regression  [MAML / paper §IV-A]: f(x) = a sin(bx + c).
+- Omniglot M-way classification: real Omniglot is unavailable offline, so
+  classes are synthetic stroke glyphs generated per class id — the
+  meta-learning STRUCTURE (disjoint class subsets per client, few-shot
+  support/query) is preserved exactly.
+- Keywords spotting (paper's contributed dataset, from Speech Commands):
+  synthetic per-keyword spectrogram prototypes (49x10 MFCC maps, the
+  MLPerf-Tiny input shape), samples jittered in time/amplitude.
+
+Every client exposes BOTH a batch view (Reptile/FedAVG) and a one-sample-
+at-a-time stream view (TinyReptile's online learning).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientTask:
+    """One client/device with its underlying task."""
+    make_sample: callable          # rng -> (x, y)
+    task_id: int
+
+    def support_batch(self, rng: np.random.Generator, size: int) -> Dict:
+        xs, ys = zip(*(self.make_sample(rng) for _ in range(size)))
+        return {"x": np.stack(xs), "y": np.stack(ys)}
+
+    def support_stream(self, rng: np.random.Generator,
+                       size: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Streaming view: one sample at a time, never stored (TinyReptile)."""
+        for _ in range(size):
+            yield self.make_sample(rng)
+
+    def query_batch(self, rng: np.random.Generator, size: int) -> Dict:
+        return self.support_batch(rng, size)
+
+
+class TaskDistribution:
+    def sample_task(self, rng: np.random.Generator) -> ClientTask:
+        raise NotImplementedError
+
+
+class SineTasks(TaskDistribution):
+    """f(x) = a sin(b x + c); a ~ U[0.1, 5], b ~ U[0.8, 1.2], c ~ U[0, pi]."""
+
+    def __init__(self, x_range=(-5.0, 5.0)):
+        self.x_range = x_range
+
+    def sample_task(self, rng) -> ClientTask:
+        a = rng.uniform(0.1, 5.0)
+        b = rng.uniform(0.8, 1.2)
+        c = rng.uniform(0.0, np.pi)
+        lo, hi = self.x_range
+
+        def make_sample(r):
+            x = r.uniform(lo, hi, size=(1,)).astype(np.float32)
+            y = (a * np.sin(b * x + c)).astype(np.float32)
+            return x, y
+
+        return ClientTask(make_sample=make_sample,
+                          task_id=int(rng.integers(1 << 31)))
+
+
+def _glyph_prototype(class_id: int, side: int = 28) -> np.ndarray:
+    """Deterministic synthetic stroke glyph for a class id."""
+    r = np.random.default_rng(class_id)
+    img = np.zeros((side, side), np.float32)
+    pos = r.integers(4, side - 4, size=2).astype(np.float64)
+    for _ in range(3):  # three strokes
+        ang = r.uniform(0, 2 * np.pi)
+        step = np.array([np.cos(ang), np.sin(ang)])
+        for _ in range(r.integers(8, 16)):
+            ang += r.normal(0, 0.4)
+            step = np.array([np.cos(ang), np.sin(ang)])
+            pos = np.clip(pos + step * 1.5, 1, side - 2)
+            i, j = int(pos[0]), int(pos[1])
+            img[i - 1:i + 2, j - 1:j + 2] += 0.5
+        pos = r.integers(4, side - 4, size=2).astype(np.float64)
+    return np.clip(img, 0, 1)
+
+
+class OmniglotTasks(TaskDistribution):
+    """M-way few-shot classification over synthetic glyph classes.
+
+    Each client samples M classes from a pool of `num_classes`; labels are
+    0..M-1 locally (heterogeneous across clients, as in the paper)."""
+
+    def __init__(self, num_classes: int = 1623, ways: int = 5,
+                 noise: float = 0.1):
+        self.num_classes = num_classes
+        self.ways = ways
+        self.noise = noise
+        self._cache: Dict[int, np.ndarray] = {}
+
+    def _proto(self, cid: int) -> np.ndarray:
+        if cid not in self._cache:
+            self._cache[cid] = _glyph_prototype(cid)
+        return self._cache[cid]
+
+    def sample_task(self, rng) -> ClientTask:
+        classes = rng.choice(self.num_classes, size=self.ways, replace=False)
+
+        def make_sample(r):
+            label = r.integers(self.ways)
+            proto = self._proto(int(classes[label]))
+            dx, dy = r.integers(-2, 3, size=2)
+            img = np.roll(proto, (dx, dy), axis=(0, 1))
+            img = img + r.normal(0, self.noise, img.shape).astype(np.float32)
+            return (img[..., None].astype(np.float32),
+                    np.int32(label))
+
+        return ClientTask(make_sample=make_sample,
+                          task_id=int(rng.integers(1 << 31)))
+
+
+def _kws_prototype(class_id: int, t: int = 49, f: int = 10) -> np.ndarray:
+    """Synthetic MFCC-like map: smooth temporal envelope x spectral shape."""
+    r = np.random.default_rng(class_id + (1 << 20))
+    env = np.convolve(r.normal(0, 1, t + 8), np.ones(9) / 9, "valid")
+    spec = np.convolve(r.normal(0, 1, f + 4), np.ones(5) / 5, "valid")
+    proto = np.outer(env, spec)
+    # add a couple of formant-like tracks
+    for _ in range(2):
+        f0 = r.integers(0, f)
+        drift = np.clip(np.cumsum(r.normal(0, 0.3, t)).astype(int) + f0,
+                        0, f - 1)
+        proto[np.arange(t), drift] += 1.0
+    return (proto / (np.abs(proto).max() + 1e-6)).astype(np.float32)
+
+
+class KWSTasks(TaskDistribution):
+    """Keywords-spotting meta-learning (the paper's contributed dataset):
+    M-way keyword classification; each client draws its own M keywords
+    from the 35-word vocabulary."""
+
+    def __init__(self, num_words: int = 35, ways: int = 4,
+                 noise: float = 0.15):
+        self.num_words = num_words
+        self.ways = ways
+        self.noise = noise
+        self._cache: Dict[int, np.ndarray] = {}
+
+    def _proto(self, cid: int) -> np.ndarray:
+        if cid not in self._cache:
+            self._cache[cid] = _kws_prototype(cid)
+        return self._cache[cid]
+
+    def sample_task(self, rng) -> ClientTask:
+        words = rng.choice(self.num_words, size=self.ways, replace=False)
+
+        def make_sample(r):
+            label = r.integers(self.ways)
+            proto = self._proto(int(words[label]))
+            shift = r.integers(-3, 4)
+            x = np.roll(proto, shift, axis=0)
+            x = x * r.uniform(0.8, 1.2)
+            x = x + r.normal(0, self.noise, x.shape).astype(np.float32)
+            return x[..., None].astype(np.float32), np.int32(label)
+
+        return ClientTask(make_sample=make_sample,
+                          task_id=int(rng.integers(1 << 31)))

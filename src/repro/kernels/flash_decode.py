@@ -1,0 +1,102 @@
+"""Flash-decode kernel: single-token GQA attention against a long KV
+cache with online softmax over KV blocks (optionally sliding-window).
+
+This is the serving hot-spot for decode_32k / long_500k. The kernel
+streams the cache HBM->VMEM block by block; running max / denominator /
+accumulator live in VMEM scratch across the sequential KV grid dim, so
+the S x H score matrix never materializes.
+
+Grid: (B, Kv, S // BLOCK_S) — the KV dim is innermost (sequential on
+TPU; scratch carries across it). Per step the kernel owns:
+  q     (R, hd)        one kv-group's query heads
+  k/v   (BLOCK_S, hd)  one cache block
+  out   (R, hd)        written at the last block
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.meta_update import pltpu_interpret
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                         m_ref, l_ref, acc_ref, *, block_s, window,
+                         num_blocks):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)           # (R, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)     # (block_s, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    hd = q.shape[-1]
+    s = (q * hd ** -0.5) @ k.T                    # (R, block_s)
+
+    pos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < cache_len
+    if window:
+        valid &= pos >= cache_len - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (R, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == num_blocks - 1)
+    def _finish():
+        out_ref[0, 0] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                 block_s: int = DEFAULT_BLOCK_S) -> jax.Array:
+    """q: (B, H, hd); k_cache/v_cache: (B, S, Kv, hd); cache_len: scalar.
+
+    Returns (B, H, hd) in q.dtype. H = Kv * R.
+    """
+    B, H, hd = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    R = H // Kv
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    num_blocks = S // block_s
+    qg = q.reshape(B, Kv, R, hd)
+
+    kernel = functools.partial(_flash_decode_kernel, block_s=block_s,
+                               window=window, num_blocks=num_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Kv, num_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, R, hd), lambda b, k, j: (b, k, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, k, j: (b, j, k, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, k, j: (b, j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, hd), lambda b, k, j: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, R, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
+        ],
+        interpret=pltpu_interpret(),
+    )(jnp.asarray([cache_len], jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)

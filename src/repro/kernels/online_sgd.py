@@ -1,0 +1,72 @@
+"""Fused streaming-SGD update kernel: p <- p - lr * g (optional momentum).
+
+TinyReptile's inner loop (Algorithm 1, line 9) performs one SGD update
+per arriving sample; at mesh scale this is the K-times-per-round param
+sweep. Fusing it keeps the inner loop at one read + one write per
+parameter, bf16 storage with fp32 arithmetic — mirroring the paper's
+observation that per-sample updates tolerate low precision well when the
+accumulation is done carefully.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.meta_update import BLOCK, LANE, SUBLANE, pltpu_interpret
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, out_ref):
+    lr = lr_ref[0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = (p - lr * g).astype(out_ref.dtype)
+
+
+def _sgd_momentum_kernel(sc_ref, p_ref, g_ref, m_ref, out_p_ref, out_m_ref):
+    lr, mu = sc_ref[0], sc_ref[1]
+    g = g_ref[...].astype(jnp.float32)
+    m_new = mu * m_ref[...] + g
+    out_m_ref[...] = m_new
+    p = p_ref[...].astype(jnp.float32)
+    out_p_ref[...] = (p - lr * m_new).astype(out_p_ref.dtype)
+
+
+def online_sgd_2d(p2d, g2d, lr) -> jax.Array:
+    grid = (p2d.shape[0] // SUBLANE,)
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+            pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+        interpret=pltpu_interpret(),
+    )(jnp.asarray([lr], jnp.float32), p2d, g2d)
+
+
+def online_sgd_momentum_2d(p2d, g2d, m2d, lr, momentum):
+    grid = (p2d.shape[0] // SUBLANE,)
+    return pl.pallas_call(
+        _sgd_momentum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+            pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+            pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+            pl.BlockSpec(BLOCK, lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+            jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+        ],
+        interpret=pltpu_interpret(),
+    )(jnp.asarray([lr, momentum], jnp.float32), p2d, g2d, m2d)

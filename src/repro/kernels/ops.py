@@ -1,0 +1,76 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle arbitrary parameter pytree leaves by flattening + padding to the
+kernel's (rows, LANE) tiling, and restore shape/dtype afterwards.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_decode as _fd
+from repro.kernels import meta_update as _mu
+from repro.kernels import online_sgd as _sgd
+
+_TILE = _mu.SUBLANE * _mu.LANE
+
+
+def _to_2d(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _mu.LANE), x.shape, x.size
+
+
+def _from_2d(y2d, shape, size):
+    return y2d.reshape(-1)[:size].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def meta_update(w, w_hat, alpha):
+    """Fused Reptile interpolation on one leaf (any shape/dtype)."""
+    w2d, shape, size = _to_2d(w)
+    wh2d, _, _ = _to_2d(w_hat.astype(w.dtype))
+    out = _mu.meta_update_2d(w2d, wh2d, jnp.asarray(alpha, jnp.float32))
+    return _from_2d(out, shape, size)
+
+
+@jax.jit
+def online_sgd(p, g, lr):
+    p2d, shape, size = _to_2d(p)
+    g2d, _, _ = _to_2d(g.astype(p.dtype))
+    out = _sgd.online_sgd_2d(p2d, g2d, jnp.asarray(lr, jnp.float32))
+    return _from_2d(out, shape, size)
+
+
+@jax.jit
+def online_sgd_momentum(p, g, m, lr, momentum):
+    p2d, shape, size = _to_2d(p)
+    g2d, _, _ = _to_2d(g.astype(p.dtype))
+    m2d, _, _ = _to_2d(m.astype(jnp.float32))
+    p_new, m_new = _sgd.online_sgd_momentum_2d(
+        p2d, g2d, m2d, jnp.asarray(lr, jnp.float32),
+        jnp.asarray(momentum, jnp.float32))
+    return _from_2d(p_new, shape, size), _from_2d(m_new, shape, size)
+
+
+def tree_meta_update(phi, phi_hat, alpha):
+    """Reptile interpolation over a whole parameter pytree."""
+    return jax.tree.map(lambda w, wh: meta_update(w, wh, alpha),
+                        phi, phi_hat)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s"))
+def flash_decode(q, k_cache, v_cache, cache_len, *, window=0,
+                 block_s=_fd.DEFAULT_BLOCK_S):
+    return _fd.flash_decode(q, k_cache, v_cache, cache_len,
+                            window=window, block_s=block_s)
+
+
+def ssd_scan(xd, dA, Bm, Cm):
+    from repro.kernels.ssd_scan import ssd_scan as _ssd
+    return _ssd(xd, dA, Bm, Cm)

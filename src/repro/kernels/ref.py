@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def meta_update(w, w_hat, alpha):
+    """Reptile interpolation: w + alpha * (w_hat - w), fp32 math."""
+    w32 = w.astype(jnp.float32)
+    return (w32 + alpha * (w_hat.astype(jnp.float32) - w32)).astype(w.dtype)
+
+
+def online_sgd(p, g, lr, m=None, momentum=0.0):
+    """Streaming SGD step; optional momentum (fp32 state)."""
+    if m is None:
+        p32 = p.astype(jnp.float32)
+        return (p32 - lr * g.astype(jnp.float32)).astype(p.dtype)
+    m_new = momentum * m + g.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * m_new).astype(p.dtype)
+    return p_new, m_new
+
+
+def flash_decode(q, k_cache, v_cache, cache_len, *, window=0):
+    """Decode attention oracle. q: (B, H, hd); caches: (B, S, Kv, hd);
+    cache_len: scalar int. Returns (B, H, hd) fp32."""
+    B, H, hd = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    R = H // Kv
+    qg = q.reshape(B, Kv, R, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkrh,bskh->bkrs", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window:
+        valid &= pos >= cache_len - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrs,bskh->bkrh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd)
+
+
+def ssd_scan(xd, dA, Bm, Cm):
+    """Chunked SSD oracle (matches kernels/ssd_scan.py layout).
+
+    xd: (B, H, nc, Q, P)  — dt-scaled inputs
+    dA: (B, H, nc, Q)     — dt * A (negative decay log-increments)
+    Bm: (B, nc, Q, N), Cm: (B, nc, Q, N) — shared across heads (ngroups=1)
+    Returns y: (B, H, nc, Q, P) fp32.
+    """
+    B, H, nc, Q, P = xd.shape
+    N = Bm.shape[-1]
+    xd = xd.astype(jnp.float32)
+    dA = dA.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    dA_cs = jnp.cumsum(dA, axis=-1)                       # (B,H,nc,Q)
+    # intra-chunk
+    diff = dA_cs[..., :, None] - dA_cs[..., None, :]      # (B,H,nc,Q,Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask, diff, -1e30))  # mask inside exp (grad-safe)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)            # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bhcij,bcij,bhcjp->bhcip", L, CB, xd)
+    # chunk states
+    decay_out = jnp.exp(dA_cs[..., -1:] - dA_cs)          # (B,H,nc,Q)
+    states = jnp.einsum("bcln,bhcl,bhclp->bhcpn", Bm, decay_out, xd)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                 # (B,H,nc)
+
+    def step(state, inp):
+        st, dec = inp
+        return state * dec[..., None, None] + st, state
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    _, prev = jax.lax.scan(
+        step, init, (states.transpose(2, 0, 1, 3, 4),
+                     chunk_decay.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 2, 0, 3, 4)                  # (B,H,nc,P,N)
+    y_off = jnp.einsum("bcln,bhcpn,bhcl->bhclp", Cm, prev, jnp.exp(dA_cs))
+    return y_diag + y_off

@@ -1,0 +1,84 @@
+"""Chunked SSD (Mamba2 state-space duality) scan kernel.
+
+The SSM compute hot-spot: per (batch, head) the sequence is processed in
+chunks; within a chunk the quadratic 'attention-like' term runs on the
+MXU, and the inter-chunk state recurrence is carried in VMEM scratch
+across the sequential chunk grid dimension — the HBM traffic is one pass
+over x/B/C/dt plus one (P, N) state resident in VMEM, never the (S, S)
+semiseparable matrix.
+
+Grid: (B, H, nc) with the chunk dim innermost (sequential on TPU).
+Per step the kernel owns:
+  xd    (Q, P)   dt-scaled inputs for this chunk
+  dA    (Q,)     dt * A log-decay increments   (passed as (Q, 1))
+  Bm,Cm (Q, N)   input/output maps (ngroups=1: shared across H)
+  state (P, N)   VMEM scratch carried across chunks
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.meta_update import pltpu_interpret
+
+
+def _ssd_kernel(xd_ref, dA_ref, B_ref, C_ref, y_ref, state_ref, *, chunk):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xd = xd_ref[0, 0, 0].astype(jnp.float32)        # (Q, P)
+    dA = dA_ref[0, 0, 0, :, 0].astype(jnp.float32)  # (Q,)
+    Bm = B_ref[0, 0].astype(jnp.float32)            # (Q, N)
+    Cm = C_ref[0, 0].astype(jnp.float32)            # (Q, N)
+
+    dA_cs = jnp.cumsum(dA)                       # (Q,)
+    # intra-chunk: L[i,j] = exp(dA_cs[i]-dA_cs[j]) for i>=j
+    diff = dA_cs[:, None] - dA_cs[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.exp(jnp.where(mask, diff, -1e30))  # mask inside exp (grad-safe)
+    CB = Cm @ Bm.T                               # (Q, Q)
+    y = (CB * L) @ xd                            # (Q, P)
+
+    # contribution of the carried state
+    state = state_ref[...]                       # (P, N)
+    y += jnp.exp(dA_cs)[:, None] * (Cm @ state.T)
+
+    # update state: decay full chunk + inject this chunk
+    decay_out = jnp.exp(dA_cs[-1] - dA_cs)       # (Q,)
+    state_ref[...] = (state * jnp.exp(dA_cs[-1])
+                      + xd.T @ (Bm * decay_out[:, None]))
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(xd, dA, Bm, Cm, *, interpret=None) -> jax.Array:
+    """xd: (B, H, nc, Q, P); dA: (B, H, nc, Q); Bm/Cm: (B, nc, Q, N).
+
+    Returns y: (B, H, nc, Q, P) float32 (matches kernels.ref.ssd_scan).
+    """
+    B, H, nc, Q, P = xd.shape
+    N = Bm.shape[-1]
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, 1),
+                         lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P),
+                               lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, Q, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=pltpu_interpret() if interpret is None else interpret,
+    )(xd, dA[..., None], Bm, Cm)

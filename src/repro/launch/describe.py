@@ -1,0 +1,84 @@
+"""Describe an architecture: config, param counts, layer pattern, and the
+production sharding plan (per-leaf PartitionSpec + per-chip bytes) without
+touching device state (AbstractMesh).
+
+  PYTHONPATH=src python -m repro.launch.describe --arch mixtral-8x22b
+  PYTHONPATH=src python -m repro.launch.describe --arch zamba2-1.2b --params
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import AbstractMesh
+
+from repro.configs import ALL_ARCHS, SHAPES, get_arch
+from repro.models import build_model
+from repro.models.transformer import find_period, layer_specs
+from repro.runtime.sharding import _path_str, _size, param_spec
+
+
+def describe(arch: str, show_params: bool, multi_pod: bool):
+    cfg = get_arch(arch)
+    mesh = (AbstractMesh((2, 16, 16), ("pod", "data", "model")) if multi_pod
+            else AbstractMesh((16, 16), ("data", "model")))
+    print(f"# {cfg.name}  [{cfg.family}]  ({cfg.source})")
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        if v not in (0, None, False, "") and f.name not in ("name", "family",
+                                                            "source"):
+            print(f"  {f.name:18s} = {v}")
+    specs = layer_specs(cfg)
+    p = find_period(specs)
+    kinds = "".join({"attn": "A", "moe": "M", "mamba": "s",
+                     "shared_attn": "S"}[k] for k, _ in specs)
+    print(f"  layer pattern      = {kinds[:80]}{'...' if len(kinds) > 80 else ''}"
+          f"  (period {p}, {len(specs)} applications)")
+    print(f"  params (analytic)  = {cfg.param_count():,} "
+          f"(active/token: {cfg.active_param_count():,})")
+    print(f"  long-context OK    = {cfg.supports_long_context()}")
+
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total_bytes = 0
+    max_chip = 0
+    rows = []
+    for path, leaf in leaves:
+        pstr = _path_str(path)
+        spec = param_spec(pstr, leaf.shape, mesh)
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        shards = 1
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is not None:
+                shards *= _size(mesh, ax)
+        total_bytes += nbytes
+        max_chip += nbytes // shards
+        rows.append((nbytes // shards, pstr, leaf.shape, spec))
+    print(f"  param bytes        = {total_bytes/1e9:.2f} GB total, "
+          f"{max_chip/1e9:.3f} GB/chip under {dict(mesh.shape)}")
+    if show_params:
+        rows.sort(reverse=True)
+        print(f"  {'bytes/chip':>12s}  {'leaf':40s} {'shape':24s} spec")
+        for b, pstr, shape, spec in rows[:25]:
+            print(f"  {b/1e6:10.1f}MB  {pstr[:40]:40s} "
+                  f"{str(tuple(shape)):24s} {spec}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ALL_ARCHS))
+    ap.add_argument("--params", action="store_true",
+                    help="show the largest parameter leaves + specs")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    for a in archs:
+        describe(a, args.params, args.multi_pod)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 TPU v5e chips
+(data, model). Multi-pod: 2 pods x 256 = 512 chips (pod, data, model).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devs)} "
+            "(run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "as launch/dryrun.py does)")
+    from jax.sharding import Mesh
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+# TPU v5e hardware constants for the roofline model.
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link

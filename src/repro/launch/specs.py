@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) pair —
+weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.models import build_model
+from repro.runtime import sharding as shrules
+
+K_INNER = 4  # TinyReptile inner-stream length per round at mesh scale
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    s = jax.ShapeDtypeStruct(shape, dtype)
+    if mesh is not None and spec is not None:
+        s = jax.ShapeDtypeStruct(shape, dtype,
+                                 sharding=NamedSharding(mesh, spec))
+    return s
+
+
+def param_specs(cfg: ArchConfig, mesh):
+    """Abstract params with production shardings attached."""
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = shrules.param_shardings(shapes, mesh)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape, mesh,
+                      k_inner: int = K_INNER) -> Dict[str, Any]:
+    """Meta-train batch: (K, mb, S) token streams."""
+    mb = shape.global_batch // k_inner
+    seq = shape.seq_len
+    tok_spec = shrules.token_spec(mesh, mb, extra_dims=1, leading=1)
+    batch = {}
+    text_len = seq
+    if cfg.frontend == "vision":
+        text_len = seq - cfg.frontend_tokens
+        batch["patch_embeds"] = _sds(
+            (k_inner, mb, cfg.frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype), mesh,
+            shrules.token_spec(mesh, mb, extra_dims=2, leading=1))
+    if cfg.family == "audio":
+        batch["frames"] = _sds(
+            (k_inner, mb, cfg.encoder_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype), mesh,
+            shrules.token_spec(mesh, mb, extra_dims=2, leading=1))
+    batch["tokens"] = _sds((k_inner, mb, text_len), jnp.int32, mesh, tok_spec)
+    batch["labels"] = _sds((k_inner, mb, text_len), jnp.int32, mesh, tok_spec)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape, mesh):
+    B, seq = shape.global_batch, shape.seq_len
+    tok_spec = shrules.token_spec(mesh, B, extra_dims=1)
+    batch = {}
+    text_len = seq
+    if cfg.frontend == "vision":
+        text_len = seq - cfg.frontend_tokens
+        batch["patch_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                     jnp.dtype(cfg.dtype), mesh,
+                                     shrules.token_spec(mesh, B, extra_dims=2))
+    if cfg.family == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_tokens, cfg.d_model),
+                               jnp.dtype(cfg.dtype), mesh,
+                               shrules.token_spec(mesh, B, extra_dims=2))
+    batch["tokens"] = _sds((B, text_len), jnp.int32, mesh, tok_spec)
+    return batch
+
+
+def decode_batch_specs(cfg: ArchConfig, shape: InputShape, mesh):
+    """Decode step: one new token against a seq_len KV cache."""
+    B, seq = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(B, seq, dtype=jnp.dtype(cfg.dtype)))
+
+    def cache_sharding(path, leaf):
+        p = shrules._path_str(path)
+        leaf_name = p.rsplit("/", 1)[-1]
+        if leaf_name in ("conv", "ssm"):
+            base = 4 if leaf_name == "ssm" else 3
+            off = len(leaf.shape) - base
+            nh = leaf.shape[off + 1] if leaf_name == "ssm" else 0
+            spec = shrules.mamba_cache_spec(mesh, leaf_name, len(leaf.shape),
+                                            B, nh)
+        else:  # attention k/v (self or cross): (..., B, S, Kv, hd)
+            spec = shrules.attn_cache_spec(mesh, len(leaf.shape), B,
+                                           leaf.shape[len(leaf.shape) - 3])
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    cache = jax.tree_util.tree_map_with_path(cache_sharding, cache_shapes)
+    return {
+        "tokens": _sds((B, 1), jnp.int32, mesh,
+                       shrules.token_spec(mesh, B, extra_dims=1)),
+        "cache": cache,
+        "cache_len": _sds((), jnp.int32, mesh, P()),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh):
+    """The full (params, batch) spec pair for the step kind of ``shape``."""
+    params = param_specs(cfg, mesh)
+    if shape.kind == "train":
+        return params, train_batch_specs(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return params, prefill_batch_specs(cfg, shape, mesh)
+    return params, decode_batch_specs(cfg, shape, mesh)

@@ -1,0 +1,104 @@
+"""Training launcher: federated meta-training (TinyReptile rounds) of any
+--arch over heterogeneous synthetic LM clients, with checkpointing.
+
+On this CPU container use --reduced (the full configs are dry-run only):
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --rounds 20 --seq 64 --batch 8 --k-inner 4
+
+On a real TPU pod the same entrypoint runs the full config under
+make_production_mesh() with the sharding rules from repro.runtime.sharding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import ALL_ARCHS, get_arch
+from repro.data import LMClientStream
+from repro.models import build_model
+from repro.optim.schedules import linear_anneal
+from repro.runtime.steps import make_meta_train_step, microbatch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ALL_ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--k-inner", type=int, default=4)
+    ap.add_argument("--beta", type=float, default=0.02)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    phi = model.init(jax.random.PRNGKey(args.seed))
+    start_round = 0
+    if args.resume and args.ckpt_dir:
+        try:
+            phi, start_round, _ = restore_checkpoint(args.ckpt_dir, phi)
+            print(f"resumed from round {start_round}")
+        except FileNotFoundError:
+            pass
+
+    clients = [LMClientStream(cfg.vocab_size, cid)
+               for cid in range(args.clients)]
+    alpha_sched = linear_anneal(args.alpha, args.rounds, floor=args.alpha * 0.1)
+    rng = np.random.default_rng(args.seed)
+
+    step = jax.jit(make_meta_train_step(model, beta=args.beta,
+                                        alpha=args.alpha),
+                   donate_argnums=(0,))
+    for rnd in range(start_round, args.rounds):
+        # TinyReptile serial schema: ONE client per round
+        client = clients[int(rng.integers(len(clients)))]
+        raw = client.batch(rng, args.batch, args.seq)
+        text_len = args.seq
+        batch = {}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = np.asarray(
+                rng.normal(size=(args.batch, cfg.frontend_tokens,
+                                 cfg.d_model)), np.float32)
+        if cfg.family == "audio":
+            batch["frames"] = np.asarray(
+                rng.normal(size=(args.batch, cfg.encoder_tokens,
+                                 cfg.d_model)), np.float32)
+        batch["tokens"] = raw["tokens"]
+        batch["labels"] = raw["labels"]
+        batch = microbatch(jax.tree.map(jnp.asarray, batch), args.k_inner)
+        alpha_t = float(alpha_sched(rnd))
+        t0 = time.time()
+        phi, metrics = step(phi, batch, jnp.float32(alpha_t))
+        print(json.dumps({
+            "round": rnd, "client": client.zipf_a,
+            "loss": float(metrics["loss"]),
+            "inner_first": float(metrics["inner_first"]),
+            "inner_last": float(metrics["inner_last"]),
+            "alpha": alpha_t, "dt_s": round(time.time() - t0, 3)}),
+            flush=True)
+        if args.ckpt_dir and (rnd + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, phi, rnd + 1,
+                            extra={"arch": args.arch})
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, phi, args.rounds,
+                        extra={"arch": args.arch})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.metering.memory import algorithm_memory_report  # noqa: F401

@@ -1,0 +1,88 @@
+"""Analytic device-memory model — simulates the MCU resource accounting of
+paper Table II (the hardware gate this container cannot measure directly).
+
+Accounting per algorithm, for a model with P parameter bytes, per-sample
+activation footprint A, per-sample data size D, support size S:
+
+  Reptile (batched):  P (weights) + P (batch-accumulated grads)
+                      + S*D (stored support set)
+                      + S*A (batched activations for the update)
+  TinyReptile (ours): P + 1*D + 1*A + delta-buffer
+                      (stream: ONE sample alive; the gradient is applied
+                       layer-by-layer during backprop — the TinyOL trick
+                       [Ren et al. 2021] — so no full gradient buffer)
+
+Calibration against paper Table II (S=32): sine 10.5 KB vs paper 10.7 KB
+(Reptile) and 5.2 KB vs 4.8 KB (TinyReptile); omniglot 3.2 MB vs 3.7 MB
+and 0.53 MB vs 0.65 MB. The KWS row differs in absolute terms because the
+paper's pipeline stores raw 1-s waveforms per sample where we account the
+preprocessed 49x10 MFCC map; the reduction factor direction matches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.paper_models import PaperModelConfig
+
+
+BYTES_F32 = 4
+
+
+def _per_sample_activation_elems(cfg: PaperModelConfig) -> int:
+    if cfg.kind == "mlp":
+        dims = list(cfg.hidden) + [cfg.num_outputs]
+        return int(np.prod(cfg.input_shape)) + sum(dims)
+    h, w, c = cfg.input_shape
+    total = h * w * c
+    for cout in cfg.channels:
+        h, w = (h + 1) // 2, (w + 1) // 2
+        total += h * w * cout
+    return total + cfg.num_outputs
+
+
+def _param_count(cfg: PaperModelConfig) -> int:
+    if cfg.kind == "mlp":
+        dims = (int(np.prod(cfg.input_shape)),) + cfg.hidden + (cfg.num_outputs,)
+        return sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+    n = 0
+    cin = cfg.input_shape[-1]
+    h, w = cfg.input_shape[0], cfg.input_shape[1]
+    for cout in cfg.channels:
+        n += 9 * cin * cout + cout
+        cin = cout
+        h, w = (h + 1) // 2, (w + 1) // 2
+    return n + h * w * cin * cfg.num_outputs + cfg.num_outputs
+
+
+def _max_layer_width(cfg: PaperModelConfig) -> int:
+    if cfg.kind == "mlp":
+        return max(cfg.hidden + (cfg.num_outputs,))
+    h, w = cfg.input_shape[0], cfg.input_shape[1]
+    widths = []
+    for cout in cfg.channels:
+        h, w = (h + 1) // 2, (w + 1) // 2
+        widths.append(h * w * cout)
+    return max(widths + [cfg.num_outputs])
+
+
+def algorithm_memory_report(cfg: PaperModelConfig,
+                            support: int = 32) -> Dict[str, float]:
+    P = _param_count(cfg) * BYTES_F32
+    A = _per_sample_activation_elems(cfg) * BYTES_F32
+    D = (int(np.prod(cfg.input_shape)) + 1) * BYTES_F32
+    reptile = 2 * P + support * (D + A)
+    # TinyOL-style in-place update: backprop delta buffer, no grad copy
+    tiny = P + (D + A) + 2 * _max_layer_width(cfg) * BYTES_F32
+    return {
+        "model": cfg.name,
+        "params": _param_count(cfg),
+        "param_bytes": P,
+        "reptile_bytes": reptile,
+        "tinyreptile_bytes": tiny,
+        "reduction_factor": reptile / tiny,
+        "fits_arduino_256kb_reptile": reptile <= 256 * 1024,
+        "fits_arduino_256kb_tinyreptile": tiny <= 256 * 1024,
+    }

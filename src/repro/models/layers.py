@@ -1,0 +1,50 @@
+"""Shared layer primitives: norms, MLPs, embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) >= 2 else max(int(np.prod(shape)), 1)
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x, weight, eps):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_mlp(key, d_model, d_ff, act, dtype):
+    """SwiGLU (silu) or plain 2-layer (gelu) MLP params."""
+    ks = jax.random.split(key, 3)
+    if act == "silu":
+        return {
+            "w_gate": normal_init(ks[0], (d_model, d_ff), 1.0, dtype),
+            "w_up": normal_init(ks[1], (d_model, d_ff), 1.0, dtype),
+            "w_down": normal_init(ks[2], (d_ff, d_model), 1.0, dtype),
+        }
+    return {
+        "w_in": normal_init(ks[0], (d_model, d_ff), 1.0, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": normal_init(ks[1], (d_ff, d_model), 1.0, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp(params, x, act):
+    if act == "silu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    return h @ params["w_out"] + params["b_out"]
+
+
+def mlp_flops(d_model, d_ff, act, tokens):
+    n = 3 if act == "silu" else 2
+    return 2 * n * d_model * d_ff * tokens

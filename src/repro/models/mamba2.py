@@ -1,0 +1,190 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD forward: quadratic attention-like term within chunks +
+linear state recurrence across chunks (jax.lax.scan). O(1)-state decode
+step. ngroups = 1 (B/C shared across heads), as in the released models.
+
+The chunked scan is also implemented as a Pallas TPU kernel
+(repro.kernels.ssd_scan); this jnp version is the oracle + XLA fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rms_norm
+from repro.runtime.shardctx import shard
+
+
+def mamba_dims(d_model, expand, head_dim, d_state):
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state  # conv over [x, B, C], ngroups=1
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba(key, d_model, d_state, head_dim, expand, conv_width, dtype):
+    d_inner, nheads, conv_dim = mamba_dims(d_model, expand, head_dim, d_state)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": normal_init(ks[0], (d_model, d_inner), 1.0, dtype),
+        "w_x": normal_init(ks[1], (d_model, d_inner), 1.0, dtype),
+        "w_B": normal_init(ks[2], (d_model, d_state), 1.0, dtype),
+        "w_C": normal_init(ks[3], (d_model, d_state), 1.0, dtype),
+        "w_dt": normal_init(ks[4], (d_model, nheads), 1.0, dtype),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "conv_w": normal_init(ks[5], (conv_width, conv_dim), 1.0, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "gate_norm": jnp.zeros((d_inner,), dtype),
+        "w_out": normal_init(ks[6], (d_inner, d_model), 1.0, dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv via shifted adds. xbc: (B,S,C); conv_w: (W,C)."""
+    W = conv_w.shape[0]
+    out = xbc * conv_w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, : xbc.shape[1]]
+        out = out + shifted * conv_w[W - 1 - i]
+    return out + conv_b
+
+
+def segsum_exp(dA_cs):
+    """exp(dA_cs[i] - dA_cs[j]) masked to i >= j. dA_cs: (..., L, h).
+
+    The mask is applied INSIDE the exp (as -inf) — masking the overflowed
+    exp afterwards leaves inf * 0 in the backward pass (NaN grads)."""
+    L = dA_cs.shape[-2]
+    diff = dA_cs[..., :, None, :] - dA_cs[..., None, :, :]   # (..., i, j, h)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.exp(jnp.where(mask[..., None], diff, -1e30))
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p) values; dt: (b, s, h) step sizes (post-softplus);
+    A: (h,) negative decay rates; Bm, Cm: (b, s, n) input/output maps
+    (ngroups=1, broadcast over heads). Returns (y, final_state) with
+    y: (b, s, h, p), state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S = x.shape[1]
+    nc = S // chunk
+
+    xd = (x * dt[..., None]).astype(jnp.float32)             # (b,S,h,p)
+    dA = (dt * A).astype(jnp.float32)                        # (b,S,h) <= 0
+    xc = xd.reshape(b, nc, chunk, h, p)
+    dAc = dA.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    dA_cs = jnp.cumsum(dAc, axis=2)                          # (b,nc,L,h)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    Lmat = segsum_exp(dA_cs)                                 # (b,nc,L,L,h)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)               # (b,nc,L,L)
+    W = CB[..., None] * Lmat                                 # (b,nc,L,L,h)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", W, xc)
+
+    # --- chunk boundary states ---
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)         # (b,nc,L,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_out, xc)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # (b,nc,h)
+
+    # --- inter-chunk recurrence ---
+    def step(state, inp):
+        st_c, dec_c = inp                                    # (b,h,p,n), (b,h)
+        new = state * dec_c[:, :, None, None] + st_c
+        return new, state                                    # emit PREVIOUS
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+    from repro.runtime.flags import probe_mode
+    if probe_mode():
+        # unrolled recurrence for exact cost_analysis (probe compiles only)
+        state = init
+        prevs = []
+        for c in range(nc):
+            prevs.append(state)
+            state = state * chunk_decay[:, c][:, :, None, None] + states[:, c]
+        final_state = state
+        prev_states = jnp.stack(prevs, axis=1)
+    else:
+        final_state, prev_states = jax.lax.scan(
+            step, init,
+            (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,nc,h,p,n)
+
+    # --- state -> output within chunk ---
+    decay_in = jnp.exp(dA_cs)                                # (b,nc,L,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, decay_in)
+
+    y = (y_diag + y_off).reshape(b, S, h, p)[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def mamba_block(params, x, *, d_state, head_dim, expand, conv_width, chunk,
+                norm_eps=1e-5):
+    """Full Mamba2 block forward (train/prefill). x: (B, S, d)."""
+    B, S, d = x.shape
+    d_inner, nheads, conv_dim = mamba_dims(d, expand, head_dim, d_state)
+    z = x @ params["w_z"]
+    xin = x @ params["w_x"]
+    Bm = x @ params["w_B"]
+    Cm = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]
+
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xin.reshape(B, S, nheads, head_dim)
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + xh * params["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], norm_eps)
+    return y @ params["w_out"]
+
+
+def mamba_decode_block(params, x, conv_state, ssm_state, *, d_state,
+                       head_dim, expand, conv_width, norm_eps=1e-5):
+    """One-token decode. x: (B, 1, d); conv_state: (B, W-1, conv_dim);
+    ssm_state: (B, h, p, n). Returns (y, conv_state, ssm_state)."""
+    B, _, d = x.shape
+    d_inner, nheads, conv_dim = mamba_dims(d, expand, head_dim, d_state)
+    z = x @ params["w_z"]
+    xin = x @ params["w_x"]
+    Bm = x @ params["w_B"]
+    Cm = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]
+
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)            # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, xbc], axis=1)      # (B,W,conv_dim)
+    new_conv_state = window[:, 1:]
+    conv_out = (window * params["conv_w"][None]).sum(axis=1, keepdims=True)
+    xbc = jax.nn.silu(conv_out + params["conv_b"])
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,1,h)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[:, 0] * A)                                # (B,h)
+    xh = xin.reshape(B, nheads, head_dim).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bm[:, 0].astype(jnp.float32), xh)
+    new_ssm_state = ssm_state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), new_ssm_state)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], norm_eps)
+    return y @ params["w_out"], new_conv_state, new_ssm_state

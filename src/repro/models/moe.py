@@ -1,0 +1,132 @@
+"""Mixture-of-Experts block: top-k token-choice routing with sort-based
+capacity dispatch (Megablocks-style grouping expressed in XLA-friendly
+gather/scatter), expert-parallel weights, load-balance aux loss, optional
+shared expert (Llama-4)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp, mlp, normal_init
+from repro.runtime.shardctx import shard
+
+
+def init_moe(key, d_model, d_ff, num_experts, shared_expert, dtype):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal_init(ks[0], (d_model, num_experts), 1.0, jnp.float32),
+        "w_gate": normal_init(ks[1], (num_experts, d_model, d_ff), 1.0, dtype),
+        "w_up": normal_init(ks[2], (num_experts, d_model, d_ff), 1.0, dtype),
+        "w_down": normal_init(ks[3], (num_experts, d_ff, d_model), 1.0, dtype),
+    }
+    if shared_expert:
+        p["shared"] = init_mlp(ks[4], d_model, d_ff, "silu", dtype)
+    return p
+
+
+def capacity(num_tokens, k, num_experts, factor=1.25):
+    c = int(math.ceil(num_tokens * k / num_experts * factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_block(params, x, *, experts_per_token, capacity_factor=1.25):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    With the ``moelocal`` lever the whole dispatch pipeline (router,
+    top-k, sort, gather, scatter) runs per data-shard token GROUP with a
+    leading group dim sharded on the batch axes — otherwise GSPMD
+    replicates the global argsort/gather chain on every chip. Capacity is
+    then per-group (standard expert-parallel semantics)."""
+    from repro.runtime.flags import feature
+    from repro.runtime.shardctx import current_mesh, resolve_axis, _axis_size
+    if feature("moelocal"):
+        mesh = current_mesh()
+        groups = 1
+        if mesh is not None:
+            ax = resolve_axis("batch", mesh)
+            g = _axis_size(mesh, ax)
+            if (x.shape[0] * x.shape[1]) % g == 0:
+                groups = g
+        if groups > 1:
+            B, S, d = x.shape
+            xg = x.reshape(groups, B * S // groups, 1, d)
+            xg = shard(xg, "batch", None, None, None)
+            y, aux = jax.vmap(
+                lambda xs: _moe_dispatch(params, xs,
+                                         experts_per_token=experts_per_token,
+                                         capacity_factor=capacity_factor,
+                                         local=True))(xg)
+            y = shard(y, "batch", None, None, None)
+            return y.reshape(B, S, d), aux.mean()
+    return _moe_dispatch(params, x, experts_per_token=experts_per_token,
+                         capacity_factor=capacity_factor)
+
+
+def _moe_dispatch(params, x, *, experts_per_token, capacity_factor=1.25,
+                  local=False):
+    B, S, d = x.shape
+    E = params["w_gate"].shape[0]
+    k = experts_per_token
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                        # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch/Mixtral style) ----
+    me = probs.mean(axis=0)                                    # mean router prob
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (T * k))                                         # token fraction
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch ----
+    C = capacity(T, k, E, capacity_factor)
+    e_flat = idx.reshape(-1)                                   # (T*k,)
+    g_flat = gate.reshape(-1)
+    tok_flat = jnp.arange(T * k, dtype=jnp.int32) // k
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    g_sorted = g_flat[order]
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos < C
+    slot = jnp.where(keep, e_sorted * C + pos, E * C)          # overflow -> drop
+
+    from repro.runtime.flags import feature
+    ex_in = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xf[tok_sorted])
+    ex_in = ex_in[: E * C].reshape(E, C, d)
+    if local:
+        pass  # constraints applied on the vmapped group dim by the caller
+    elif feature("moe2d"):
+        ex_in = shard(ex_in, None, None, "fsdp")   # contract d per-shard
+    else:
+        ex_in = shard(ex_in, "expert", None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", ex_in, params["w_up"])
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    if local:
+        pass
+    elif feature("moe2d"):
+        # keep the OUTPUT d-sharded: the f-contraction all-reduces tiny
+        # (E,C,d/16) activations instead of all-gathering w_down's d dim
+        y_e = shard(y_e, None, None, "fsdp")
+    else:
+        y_e = shard(y_e, "expert", None, None)
+
+    y_pad = jnp.concatenate(
+        [y_e.reshape(E * C, d), jnp.zeros((1, d), y_e.dtype)], axis=0)
+    y_sorted = y_pad[jnp.where(keep, slot, E * C)]
+    contrib = y_sorted * jnp.where(keep, g_sorted, 0.0)[:, None].astype(y_sorted.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok_sorted].add(contrib)
+    y = y.reshape(B, S, d)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, "silu")
+    return y, aux

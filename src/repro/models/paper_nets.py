@@ -1,0 +1,81 @@
+"""The paper's own models (Table I): a 1,153-param sine MLP and small
+conv classifiers, as pure-JAX pytree models — these are the faithful
+reproduction substrate that the core/ algorithms train on MCU-class
+problems."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import PaperModelConfig
+
+
+def init_paper_model(cfg: PaperModelConfig, key) -> Dict[str, Any]:
+    if cfg.kind == "mlp":
+        dims = (int(np.prod(cfg.input_shape)),) + cfg.hidden + (cfg.num_outputs,)
+        params = {}
+        ks = jax.random.split(key, len(dims) - 1)
+        for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+            params[f"w{i}"] = (jax.random.normal(ks[i], (din, dout))
+                               * np.sqrt(2.0 / din)).astype(jnp.float32)
+            params[f"b{i}"] = jnp.zeros((dout,), jnp.float32)
+        return params
+    # conv: 3x3 stride-2 blocks + linear head
+    params = {}
+    ks = jax.random.split(key, len(cfg.channels) + 1)
+    cin = cfg.input_shape[-1]
+    h, w = cfg.input_shape[0], cfg.input_shape[1]
+    for i, cout in enumerate(cfg.channels):
+        fan = 9 * cin
+        params[f"conv{i}"] = (jax.random.normal(ks[i], (3, 3, cin, cout))
+                              * np.sqrt(2.0 / fan)).astype(jnp.float32)
+        params[f"cb{i}"] = jnp.zeros((cout,), jnp.float32)
+        cin = cout
+        h, w = (h + 1) // 2, (w + 1) // 2
+    flat = h * w * cin
+    params["head_w"] = (jax.random.normal(ks[-1], (flat, cfg.num_outputs))
+                        * np.sqrt(1.0 / flat)).astype(jnp.float32)
+    params["head_b"] = jnp.zeros((cfg.num_outputs,), jnp.float32)
+    return params
+
+
+def paper_model_apply(cfg: PaperModelConfig, params, x):
+    """x: (B, *input_shape) -> (B, num_outputs)."""
+    if cfg.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        n = len(cfg.hidden) + 1
+        for i in range(n):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n - 1:
+                h = jnp.tanh(h)  # paper's sine net uses smooth nonlinearity
+        return h
+    h = x
+    for i in range(len(cfg.channels)):
+        h = jax.lax.conv_general_dilated(
+            h, params[f"conv{i}"], window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + params[f"cb{i}"])
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["head_w"] + params["head_b"]
+
+
+def paper_model_loss(cfg: PaperModelConfig, params, batch):
+    """batch: {"x": (B, ...), "y": (B,) or (B,1)}."""
+    pred = paper_model_apply(cfg, params, batch["x"])
+    if cfg.loss == "mse":
+        return jnp.mean(jnp.square(pred - batch["y"].reshape(pred.shape)))
+    labels = batch["y"].astype(jnp.int32).reshape(-1)
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def paper_model_accuracy(cfg: PaperModelConfig, params, batch):
+    pred = paper_model_apply(cfg, params, batch["x"])
+    return jnp.mean((jnp.argmax(pred, -1) == batch["y"].reshape(-1)))
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

@@ -1,0 +1,73 @@
+"""Minimal pytree optimizers (SGD / AdamW) in the optax (init, update)
+style — built in-repo since the container is offline."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params, lr)
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: p - (lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, state
+        new_state = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        new_params = jax.tree.map(
+            lambda p, m: p - (lr * m).astype(p.dtype), params, new_state)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+
+        def upd(p, m, v):
+            step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(mu, nu, count)
+
+    return Optimizer(init, update)

@@ -1,0 +1,48 @@
+"""Learning-rate schedules.
+
+``wsd`` is the Warmup-Stable-Decay schedule used to train MiniCPM-2B
+[arXiv:2404.06395]; ``linear_anneal`` implements the annealing suggested
+for TinyReptile's server rate alpha (paper Appendix A / Reptile paper).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_anneal(lr, total_steps, floor=0.0):
+    def f(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.asarray(lr * (1 - frac) + floor * frac, jnp.float32)
+    return f
+
+
+def cosine(lr, total_steps, warmup=0, floor_ratio=0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = floor_ratio * lr + (1 - floor_ratio) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(lr, total_steps, warmup_frac=0.01, decay_frac=0.1, floor_ratio=0.1):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long stable plateau,
+    fast exponential-ish (linear here) decay tail."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / warmup
+        frac = jnp.clip((step - decay_start) / max(total_steps - decay_start, 1),
+                        0, 1)
+        tail = lr * (1 - (1 - floor_ratio) * frac)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < decay_start, lr, tail))
+    return f

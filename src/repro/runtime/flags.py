@@ -1,0 +1,88 @@
+"""Runtime mode flags.
+
+PROBE mode (env REPRO_PROBE=1 or probe_scope()): replaces every
+jax.lax.scan / blockwise-flash loop with unrolled / single-block
+equivalents so XLA's cost_analysis (which counts while-loop bodies ONCE,
+not x trip-count) is exact. Probe compiles run at reduced layer / inner
+counts and the dry-run extrapolates linearly. Never use probe mode for
+real execution — the unrolled quadratic attention materializes S^2
+score buffers.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+
+_state = threading.local()
+
+
+def probe_mode() -> bool:
+    if getattr(_state, "probe", None) is not None:
+        return _state.probe
+    return os.environ.get("REPRO_PROBE", "0") == "1"
+
+
+@contextlib.contextmanager
+def probe_scope(on: bool = True):
+    prev = getattr(_state, "probe", None)
+    _state.probe = on
+    try:
+        yield
+    finally:
+        _state.probe = prev
+
+
+# ---------------------------------------------------------------------------
+# performance feature flags (§Perf hillclimbing levers; default = baseline)
+# ---------------------------------------------------------------------------
+# gqa_flat : compute GQA with K/V repeated to H flat heads so the head dim
+#            shards even when num_kv_heads < mesh model size (kills score
+#            replication for kv=8 on a 16-way model axis).
+# banded   : sliding-window attention gathers only the KV band per Q block
+#            (real FLOP cut) instead of masking the full row.
+# moe2d    : 2D-shard MoE expert weights (d->data, f->model) stationarily
+#            instead of FSDP weight all-gathers — activations all-reduce
+#            (tiny at decode) replaces per-step weight movement.
+# ringkv   : sliding-window layers keep only a window-sized ring-buffer KV
+#            cache (K is RoPE'd at insert, so no position bookkeeping) —
+#            cache footprint and attention read traffic / (S/window).
+# moelocal : MoE routing/sort/dispatch per data-shard token group instead
+#            of over the global token dim (GSPMD replicates the global
+#            argsort+gather pipeline on every chip — TB/chip of traffic).
+#            Capacity is enforced per shard, as real EP systems do.
+
+# seqpar   : sequence-parallel attention — shard the QUERY dim over the
+#            model axis for the attention section (works for any head
+#            count, e.g. llama4's H=40 that 16 cannot divide; avoids
+#            GSPMD's replicate-then-partition copies of S^2 scores).
+
+_FEATURES = ("gqa_flat", "banded", "moe2d", "ringkv", "moelocal", "seqpar")
+
+
+def feature(name: str) -> bool:
+    assert name in _FEATURES, name
+    st = getattr(_state, "features", None)
+    if st is not None and name in st:
+        return st[name]
+    return os.environ.get(f"REPRO_OPT_{name.upper()}", "0") == "1"
+
+
+@contextlib.contextmanager
+def feature_scope(**kw):
+    prev = getattr(_state, "features", None)
+    merged = dict(prev or {})
+    merged.update(kw)
+    _state.features = merged
+    try:
+        yield
+    finally:
+        _state.features = prev
+
+
+def set_features_from_env_string(s: str):
+    """'gqa_flat,moe2d' -> enable those for this process (dryrun --opt)."""
+    on = {x.strip() for x in s.split(",") if x.strip()}
+    unknown = on - set(_FEATURES)
+    assert not unknown, unknown
+    _state.features = {f: (f in on) for f in _FEATURES}

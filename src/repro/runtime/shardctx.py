@@ -1,0 +1,99 @@
+"""Ambient sharding context.
+
+Models are mesh-agnostic; step builders install the active mesh here and
+layers call ``shard(x, *logical_axes)`` to drop GSPMD constraints. Outside
+a mesh (CPU smoke tests) the helpers are no-ops.
+
+Logical axes: "batch" -> all data-parallel mesh axes ("pod","data"),
+"model" -> tensor axis, "expert" -> expert-parallel axis (aliases model),
+None -> replicated dim.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+@contextlib.contextmanager
+def manual_axes(*axes):
+    """Axes handled manually (shard_map) — excluded from constraints."""
+    prev = getattr(_state, "manual", ())
+    _state.manual = tuple(set(prev) | set(axes))
+    try:
+        yield
+    finally:
+        _state.manual = prev
+
+
+def _manual():
+    return getattr(_state, "manual", ())
+
+
+def resolve_axis(logical, mesh):
+    names = tuple(a for a in mesh.axis_names if a not in _manual())
+    if logical is None:
+        return None
+    if logical == "batch":
+        ax = tuple(a for a in ("pod", "data") if a in names)
+        return ax if ax else None
+    if logical in ("model", "expert"):
+        return "model" if "model" in names else None
+    if logical in ("seq", "fsdp"):  # context-parallel / fsdp dim
+        return "data" if "data" in names else None
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def spec(*logical):
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return P(*(resolve_axis(l, mesh) for l in logical))
+
+
+def _axis_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        out = 1
+        for a in ax:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[ax]
+
+
+def shard(x, *logical):
+    """with_sharding_constraint if a mesh is active, else identity.
+
+    Axes whose size does not evenly divide the corresponding dim are
+    dropped (replicated) — avoids uneven-sharding pitfalls for small dims.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, l in zip(x.shape, logical):
+        ax = resolve_axis(l, mesh)
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        resolved.append(ax)
+    s = P(*resolved)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))

@@ -1,0 +1,247 @@
+"""Parameter / input sharding rules for the production meshes.
+
+Strategy (baseline; the §Perf loop iterates on it):
+- tensor parallelism on the ``model`` axis: FFN hidden dim, attention
+  heads (falling back to head_dim, then the contraction dim when head
+  counts don't divide), MoE experts (expert parallelism when E >= axis),
+  vocab for embed/lm_head;
+- FSDP on the ``data`` axis for any leaf whose per-model-shard footprint
+  exceeds a threshold (weights are all-gathered layer-by-layer under the
+  scan, so the live working set stays one layer);
+- batch on (``pod``, ``data``); long-context decode (batch=1) shards the
+  KV-cache *sequence* dim instead (context parallelism).
+
+All rules respect divisibility: an axis that does not divide the dim is
+dropped (replicated) rather than unevenly sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP_THRESHOLD_BYTES = 32 * 1024 * 1024
+
+
+def _axes(mesh):
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    return batch, ("model" if "model" in names else None)
+
+
+def _size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        s = 1
+        for a in ax:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[ax]
+
+
+def _fits(dim, mesh, ax):
+    return ax is not None and dim % _size(mesh, ax) == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+_BASE_RANK = {
+    "embed": 2, "lm_head": 2, "vision_proj": 2, "final_norm": 1,
+    "wq": 3, "wk": 3, "wv": 3, "wo": 3,
+    "router": 2, "w_in": 2, "w_out": 2, "b_in": 1, "b_out": 1,
+    "w_z": 2, "w_x": 2, "w_B": 2, "w_C": 2, "w_dt": 2,
+    "dt_bias": 1, "A_log": 1, "D": 1, "conv_w": 2, "conv_b": 1,
+    "gate_norm": 1, "norm1": 1, "norm2": 1, "norm_x": 1,
+}
+
+
+def _base_rank(path: str, leaf: str) -> int:
+    if leaf in ("w_gate", "w_up"):
+        return 3 if "/moe/" in "/" + path + "/" and "shared" not in path else 2
+    if leaf == "w_down":
+        return 3 if "/moe/" in "/" + path + "/" and "shared" not in path else 2
+    if leaf == "w_out" and "mamba" in path:
+        return 2
+    return _BASE_RANK.get(leaf, 2)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh) -> P:
+    """Sharding rule for one parameter leaf."""
+    batch_ax, model_ax = _axes(mesh)
+    data_ax = "data" if "data" in mesh.axis_names else None
+    leaf_name = path.rsplit("/", 1)[-1]
+    base = _base_rank(path, leaf_name)
+    if len(shape) < base:  # malformed/unknown leaf: replicate
+        return P(*([None] * len(shape)))
+    off = len(shape) - base  # scan stacks carry leading group dims
+    dims = list(shape[off:])
+    spec = [None] * len(shape)
+    leaf = leaf_name
+
+    def assign(rel_idx, ax):
+        spec[off + rel_idx] = ax
+
+    if len(dims) == 0 or model_ax is None:
+        pass
+    elif leaf == "embed":
+        if _fits(dims[0], mesh, model_ax):
+            assign(0, model_ax)  # vocab
+    elif leaf == "lm_head":
+        if _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)  # vocab
+    elif leaf in ("wq", "wk", "wv"):
+        # (d, N, hd): heads -> head_dim -> contraction fallback
+        if _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)
+        elif _fits(dims[2], mesh, model_ax):
+            assign(2, model_ax)
+        elif _fits(dims[0], mesh, model_ax):
+            assign(0, model_ax)
+    elif leaf == "wo":
+        # (N, hd, d)
+        if _fits(dims[0], mesh, model_ax):
+            assign(0, model_ax)
+        elif _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)
+        elif _fits(dims[2], mesh, model_ax):
+            assign(2, model_ax)
+    elif leaf in ("w_gate", "w_up"):
+        if len(dims) == 3:  # MoE experts (E, d, f)
+            from repro.runtime.flags import feature
+            if feature("moe2d") and not _fits(dims[0], mesh, model_ax):
+                # §Perf lever: stationary 2D sharding (d->data, f->model):
+                # activations all-reduce instead of FSDP weight gathers.
+                if _fits(dims[1], mesh, data_ax):
+                    assign(1, data_ax)
+                if _fits(dims[2], mesh, model_ax):
+                    assign(2, model_ax)
+                return P(*spec)
+            if _fits(dims[0], mesh, model_ax):
+                assign(0, model_ax)       # expert parallelism
+            elif _fits(dims[2], mesh, model_ax):
+                assign(2, model_ax)       # fall back to hidden TP
+        else:               # dense (d, f)
+            if _fits(dims[1], mesh, model_ax):
+                assign(1, model_ax)
+    elif leaf == "w_down":
+        if len(dims) == 3:  # (E, f, d)
+            from repro.runtime.flags import feature
+            if feature("moe2d") and not _fits(dims[0], mesh, model_ax):
+                if _fits(dims[1], mesh, model_ax):
+                    assign(1, model_ax)
+                if _fits(dims[2], mesh, data_ax):
+                    assign(2, data_ax)
+                return P(*spec)
+            if _fits(dims[0], mesh, model_ax):
+                assign(0, model_ax)
+            elif _fits(dims[1], mesh, model_ax):
+                assign(1, model_ax)
+        else:               # (f, d)
+            if _fits(dims[0], mesh, model_ax):
+                assign(0, model_ax)
+    elif leaf in ("w_in",):
+        if _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)
+    elif leaf in ("w_out",):
+        if _fits(dims[0], mesh, model_ax):
+            assign(0, model_ax)
+    elif leaf in ("w_z", "w_x"):      # (d, d_inner)
+        if _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)
+    elif leaf in ("w_B", "w_C", "w_dt"):
+        if _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)
+    elif leaf == "conv_w":            # (W, conv_dim)
+        if _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)
+    elif leaf == "vision_proj":
+        if _fits(dims[1], mesh, model_ax):
+            assign(1, model_ax)
+    # norms, biases, router, A_log, D, dt_bias, conv_b, gate_norm: replicated
+
+    # ---- FSDP pass: shard one more (unassigned, divisible) dim on data ----
+    if data_ax is not None:
+        itemsize = 2  # bf16 dominant
+        sharded = any(s is not None for s in spec)
+        model_shards = _size(mesh, model_ax) if sharded else 1
+        per_shard = int(np.prod(shape)) * itemsize // max(model_shards, 1)
+        if per_shard > FSDP_THRESHOLD_BYTES:
+            # biggest unassigned divisible dim (excluding stack dim)
+            cands = [(dims[i], i) for i in range(len(dims))
+                     if spec[off + i] is None and _fits(dims[i], mesh, data_ax)]
+            if cands:
+                _, best = max(cands)
+                assign(best, data_ax)
+    return P(*spec)
+
+
+def param_shardings(params, mesh):
+    """Pytree of NamedSharding matching ``params``."""
+    def leaf_spec(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path),
+                                              np.shape(leaf), mesh))
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+# ---------------------------------------------------------------------------
+# input shardings
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def token_spec(mesh, batch_size, extra_dims=1, leading=0):
+    """(batch, seq...) arrays: shard batch when divisible."""
+    b_ax = batch_axes(mesh)
+    ax = b_ax if b_ax and batch_size % _size(mesh, b_ax) == 0 else None
+    return P(*([None] * leading + [ax] + [None] * extra_dims))
+
+
+def attn_cache_spec(mesh, ndim, batch_size, seq_len) -> P:
+    """(..., B, S, Kv, hd): batch on data axes when divisible, sequence on
+    the remaining axes (context parallelism) — the KV cache is the decode
+    memory hog, so we spread it over every available axis."""
+    b_ax = batch_axes(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    spec = [None] * ndim
+    b_i, s_i = ndim - 4, ndim - 3
+    seq_axes = []
+    if b_ax and batch_size % _size(mesh, b_ax) == 0:
+        spec[b_i] = b_ax
+    else:
+        seq_axes.extend(b_ax)
+    if model_ax:
+        seq_axes.append(model_ax)
+    seq_axes = tuple(seq_axes)
+    if seq_axes and seq_len % _size(mesh, seq_axes) == 0:
+        spec[s_i] = seq_axes
+    return P(*spec)
+
+
+def mamba_cache_spec(mesh, leaf_name, ndim, batch_size, head_count) -> P:
+    """ssm state (..., B, H, P, N) or conv state (..., B, W, C)."""
+    b_ax = batch_axes(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    base = 4 if leaf_name == "ssm" else 3
+    off = ndim - base
+    spec = [None] * ndim
+    if b_ax and batch_size % _size(mesh, b_ax) == 0:
+        spec[off] = b_ax
+    if (model_ax and leaf_name == "ssm"
+            and head_count % _size(mesh, model_ax) == 0):
+        spec[off + 1] = model_ax
+    return P(*spec)

@@ -1,0 +1,98 @@
+"""Step builders: the paper's technique (TinyReptile round) as the
+production train step, plus joint-training baseline, prefill, and decode.
+
+``make_meta_train_step`` is TinyReptile at mesh scale:
+  - the inner loop is a lax.scan of K streaming SGD steps (the paper's
+    online learning: one microbatch per step, discarded immediately);
+  - the client cohort is the data-parallel section of the mesh, so each
+    inner step's gradient is the cohort all-reduce (batched-Reptile
+    semantics, paper Fig. 2);
+  - the outer update is the Reptile interpolation phi <- phi + a(phi_hat - phi).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.shardctx import shard
+
+
+def make_meta_train_step(model, *, beta: float = 0.01, alpha: float = 0.5,
+                         use_pallas: bool = False) -> Callable:
+    """TinyReptile round. batch: {"tokens": (K, mb, S), "labels": ...}.
+
+    Returns (new_phi, metrics). K = inner stream length (paper: one SGD
+    step per arriving sample; here one per arriving microbatch).
+    """
+    def loss_of(phi_hat, micro):
+        return model.loss_fn(phi_hat, micro)
+
+    def step(phi, batch, alpha=alpha):
+        # alpha may be a traced scalar (annealed server rate) — one compile
+        def inner(phi_hat, micro):
+            loss, g = jax.value_and_grad(loss_of)(phi_hat, micro)
+            phi_hat = jax.tree.map(
+                lambda p, gg: (p.astype(jnp.float32)
+                               - beta * gg.astype(jnp.float32)).astype(p.dtype),
+                phi_hat, g)
+            return phi_hat, loss
+
+        from repro.runtime.flags import probe_mode
+        if probe_mode():
+            k = jax.tree.leaves(batch)[0].shape[0]
+            phi_hat, losses = phi, []
+            for i in range(k):
+                micro = jax.tree.map(lambda a: a[i], batch)
+                phi_hat, l = inner(phi_hat, micro)
+                losses.append(l)
+            losses = jnp.stack(losses)
+        else:
+            phi_hat, losses = jax.lax.scan(inner, phi, batch)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            new_phi = jax.tree.map(
+                lambda p, ph: kops.meta_update(p, ph, alpha), phi, phi_hat)
+        else:
+            new_phi = jax.tree.map(
+                lambda p, ph: (p.astype(jnp.float32) + alpha
+                               * (ph.astype(jnp.float32)
+                                  - p.astype(jnp.float32))).astype(p.dtype),
+                phi, phi_hat)
+        return new_phi, {"loss": losses.mean(), "inner_first": losses[0],
+                         "inner_last": losses[-1]}
+
+    return step
+
+
+def make_joint_train_step(model, optimizer, schedule) -> Callable:
+    """Baseline joint training (the transfer-learning / FedAVG-objective
+    regime the paper compares against): one optimizer step per batch."""
+    def step(params, opt_state, opt_step, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        lr = schedule(opt_step)
+        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        return new_params, new_state, opt_step + 1, {"loss": loss, "lr": lr}
+    return step
+
+
+def make_prefill_step(model) -> Callable:
+    def step(params, batch):
+        return model.prefill_fn(params, batch)
+    return step
+
+
+def make_decode_step(model) -> Callable:
+    def step(params, batch):
+        return model.decode_fn(params, batch)
+    return step
+
+
+def microbatch(batch: Dict[str, Any], k: int) -> Dict[str, Any]:
+    """Reshape (B, ...) arrays to (k, B//k, ...) inner-stream microbatches."""
+    def r(x):
+        b = x.shape[0]
+        return x.reshape(k, b // k, *x.shape[1:])
+    return jax.tree.map(r, batch)

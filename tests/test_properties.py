@@ -1,0 +1,155 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.meta import tree_lerp
+from repro.kernels import ops
+from repro.models.moe import capacity
+from repro.models.transformer import chunked_cross_entropy, find_period
+from repro.optim.schedules import cosine, linear_anneal, wsd
+
+SET = dict(deadline=None, max_examples=20, derandomize=True)
+
+
+@given(st.integers(1, 400), st.floats(0.0, 1.0))
+@settings(**SET)
+def test_meta_update_convexity(n, alpha):
+    """phi' lies on the segment [phi, phi_hat]; endpoints exact."""
+    r = np.random.default_rng(n)
+    w = jnp.asarray(r.normal(size=n), jnp.float32)
+    wh = jnp.asarray(r.normal(size=n), jnp.float32)
+    out = ops.meta_update(w, wh, alpha)
+    lo = jnp.minimum(w, wh) - 1e-5
+    hi = jnp.maximum(w, wh) + 1e-5
+    assert bool(((out >= lo) & (out <= hi)).all())
+    # endpoints: alpha=0 exact; alpha=1 only up to fp32 cancellation in
+    # w + (wh - w)
+    np.testing.assert_array_equal(ops.meta_update(w, wh, 0.0), w)
+    np.testing.assert_allclose(ops.meta_update(w, wh, 1.0), wh,
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 1000))
+@settings(**SET)
+def test_kernel_tree_update_matches_tree_lerp(seed):
+    r = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(r.normal(size=(3, 7)), jnp.float32),
+            "b": [jnp.asarray(r.normal(size=11), jnp.float32)]}
+    tree2 = jax.tree.map(lambda x: x + 1.0, tree)
+    got = ops.tree_meta_update(tree, tree2, 0.25)
+    want = tree_lerp(tree, tree2, 0.25)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(1, 128))
+@settings(**SET)
+def test_moe_capacity_invariants(tokens, k, experts):
+    c = capacity(tokens, k, experts)
+    assert c % 8 == 0
+    assert c * experts >= tokens * k  # enough slots for cf >= 1
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(5, 40))
+@settings(**SET)
+def test_chunked_ce_matches_full(b, nch, vocab):
+    r = np.random.default_rng(b * 100 + nch)
+    S, d = nch * 4, 16
+    x = jnp.asarray(r.normal(size=(b, S, d)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(d, vocab)), jnp.float32)
+    labels = jnp.asarray(r.integers(0, vocab, size=(b, S)), jnp.int32)
+    full = chunked_cross_entropy(x, w, labels, chunk=S)
+    chunked = chunked_cross_entropy(x, w, labels, chunk=4)
+    np.testing.assert_allclose(full, chunked, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 100))
+@settings(**SET)
+def test_chunked_ce_ignores_masked(seed):
+    r = np.random.default_rng(seed)
+    b, S, d, vocab = 2, 8, 8, 13
+    x = jnp.asarray(r.normal(size=(b, S, d)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(d, vocab)), jnp.float32)
+    labels = jnp.asarray(r.integers(0, vocab, size=(b, S)), jnp.int32)
+    masked = labels.at[:, -3:].set(-1)
+    base = chunked_cross_entropy(x[:, :-3], w, labels[:, :-3], chunk=4)
+    got = chunked_cross_entropy(x, w, masked, chunk=4)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-6)
+
+
+@given(st.lists(st.sampled_from(["a", "b", "c"]), min_size=1, max_size=24))
+@settings(**SET)
+def test_find_period_minimal_and_correct(pattern):
+    specs = [(k, 0) for k in pattern]
+    p = find_period(specs)
+    assert len(specs) % p == 0
+    assert specs == specs[:p] * (len(specs) // p)
+    for q in range(1, p):
+        assert not (len(specs) % q == 0
+                    and specs == specs[:q] * (len(specs) // q))
+
+
+@given(st.floats(1e-5, 1.0), st.integers(10, 1000))
+@settings(**SET)
+def test_schedules_bounded(lr, total):
+    for sched in (wsd(lr, total), cosine(lr, total, warmup=total // 10),
+                  linear_anneal(lr, total)):
+        for step in (0, 1, total // 2, total - 1, total):
+            v = float(sched(step))
+            assert 0.0 <= v <= lr * (1 + 1e-6), (sched, step, v)
+
+
+@given(st.integers(0, 50))
+@settings(**SET)
+def test_wsd_shape(seed):
+    """WSD: warmup rises, plateau constant at lr, decay falls."""
+    lr, total = 0.01, 1000
+    s = wsd(lr, total)
+    assert float(s(0)) < float(s(9))                # warmup rising
+    assert abs(float(s(500)) - lr) < 1e-9           # stable plateau
+    assert float(s(999)) < lr                       # decaying tail
+
+
+_LEAVES = ["embed", "lm_head", "wq", "wk", "wv", "wo", "w_gate", "w_up",
+           "w_down", "w_z", "w_B", "conv_w", "norm1"]
+
+
+@given(st.sampled_from(_LEAVES),
+       st.lists(st.sampled_from([1, 2, 3, 8, 16, 40, 128, 640, 2048]),
+                min_size=1, max_size=4),
+       st.booleans())
+@settings(**SET)
+def test_sharding_specs_always_divide(leaf, dims, multi_pod):
+    """param_spec never produces uneven sharding, on either mesh."""
+    from jax.sharding import AbstractMesh
+    from repro.runtime.sharding import param_spec, _size
+    mesh = (AbstractMesh((2, 16, 16), ("pod", "data", "model")) if multi_pod
+            else AbstractMesh((16, 16), ("data", "model")))
+    path = f"layers/0/attn/{leaf}" if leaf.startswith("w") else leaf
+    spec = param_spec(path, tuple(dims), mesh)
+    for dim, ax in zip(dims, spec):
+        if ax is not None:
+            assert dim % _size(mesh, ax) == 0, (leaf, dims, spec)
+
+
+@given(st.integers(0, 30))
+@settings(**SET)
+def test_checkpoint_roundtrip(seed):
+    import tempfile
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    r = np.random.default_rng(seed)
+    tree = {"w": jnp.asarray(r.normal(size=(4, 5)), jnp.float32),
+            "nested": {"b": jnp.asarray(r.normal(size=7), jnp.float32)},
+            "stack": [jnp.asarray(r.integers(0, 9, size=3), jnp.int32)]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, tree, step=seed, extra={"k": 1})
+        got, step, extra = restore_checkpoint(d, tree)
+        assert step == seed and extra == {"k": 1}
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(a, b)
