@@ -1,0 +1,119 @@
+"""Engine speedup tracking: rounds/sec for the pre-refactor per-client
+Python loops vs the scanned/vmapped round engine, on the paper's sine
+task. Acceptance floor (PR 1): >= 3x for batched-client Reptile
+(clients_per_round=8) on CPU.
+
+Writes BENCH_engine.json next to the repo root (same spirit as the
+results/dryrun JSON cells consumed by benchmarks/report.py) so the
+speedup is tracked across future PRs.
+
+  PYTHONPATH=src python -m benchmarks.engine_bench
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import SINE_MLP
+from repro.core import reptile_train, tinyreptile_train
+from repro.core.meta import finetune_batch, finetune_online, tree_lerp
+from repro.data import SineTasks
+from repro.models.paper_nets import init_paper_model, paper_model_loss
+
+LOSS = functools.partial(paper_model_loss, SINE_MLP)
+ROUNDS = 120
+SUPPORT = 32
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_engine.json")
+
+
+# -- pre-refactor loops (one host->device dispatch per client per round) ----
+
+def _python_loop_tinyreptile(params, dist, rounds):
+    rng = np.random.default_rng(0)
+    phi = params
+    for rnd in range(rounds):
+        alpha_t = 1.0 * (1 - rnd / rounds)
+        task = dist.sample_task(rng)
+        xs, ys = zip(*task.support_stream(rng, SUPPORT))
+        phi_hat, _ = finetune_online(LOSS, phi, jnp.stack(xs), jnp.stack(ys),
+                                     jnp.float32(0.02))
+        phi = tree_lerp(phi, phi_hat, alpha_t)
+    return jax.block_until_ready(jax.tree.leaves(phi)[0])
+
+
+def _python_loop_reptile(params, dist, rounds, clients, epochs=8):
+    rng = np.random.default_rng(0)
+    phi = params
+    for rnd in range(rounds):
+        alpha_t = 1.0 * (1 - rnd / rounds)
+        deltas = None
+        for _ in range(clients):
+            task = dist.sample_task(rng)
+            sup = task.support_batch(rng, SUPPORT)
+            phi_hat, _ = finetune_batch(LOSS, phi, sup, epochs,
+                                        jnp.float32(0.02))
+            d = jax.tree.map(lambda q, p: q - p, phi_hat, phi)
+            deltas = d if deltas is None else jax.tree.map(
+                lambda a, b: a + b, deltas, d)
+        phi = jax.tree.map(lambda p, d: p + alpha_t * d / clients,
+                           phi, deltas)
+    return jax.block_until_ready(jax.tree.leaves(phi)[0])
+
+
+def _rounds_per_sec(fn, rounds):
+    fn()                                  # warmup: compile + caches
+    t0 = time.perf_counter()
+    fn()
+    return rounds / (time.perf_counter() - t0)
+
+
+def run():
+    params = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
+    dist = SineTasks()
+    results = {}
+
+    cases = [
+        ("tinyreptile",
+         lambda: _python_loop_tinyreptile(params, dist, ROUNDS),
+         lambda: tinyreptile_train(LOSS, params, dist, rounds=ROUNDS,
+                                   alpha=1.0, beta=0.02, support=SUPPORT,
+                                   seed=0)),
+        ("reptile_batched_c8",
+         lambda: _python_loop_reptile(params, dist, ROUNDS, clients=8),
+         lambda: reptile_train(LOSS, params, dist, rounds=ROUNDS, alpha=1.0,
+                               beta=0.02, support=SUPPORT, epochs=8,
+                               clients_per_round=8, seed=0)),
+    ]
+    rows = []
+    for name, legacy_fn, engine_fn in cases:
+        legacy_rps = _rounds_per_sec(legacy_fn, ROUNDS)
+        engine_rps = _rounds_per_sec(engine_fn, ROUNDS)
+        speedup = engine_rps / legacy_rps
+        results[name] = {"python_loop_rounds_per_sec": round(legacy_rps, 2),
+                         "engine_rounds_per_sec": round(engine_rps, 2),
+                         "speedup": round(speedup, 2)}
+        rows.append((f"engine/{name}_python_loop", 1e6 / legacy_rps,
+                     f"rounds_per_sec={legacy_rps:.1f}"))
+        rows.append((f"engine/{name}_engine", 1e6 / engine_rps,
+                     f"rounds_per_sec={engine_rps:.1f} "
+                     f"speedup={speedup:.2f}x"))
+
+    payload = {"bench": "engine", "status": "OK", "backend":
+               jax.default_backend(), "rounds": ROUNDS, "support": SUPPORT,
+               "results": results}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

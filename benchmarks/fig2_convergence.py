@@ -1,5 +1,9 @@
 """Paper Fig. 2: training convergence of FedSGD, FedAVG, Reptile
 (batched & serial), and TinyReptile on the Sine-wave example.
+
+All five run on the shared federated round engine (repro.core.engine):
+one vmapped/scanned loop, so the per-round us here measures the engine,
+not five hand-rolled Python loops.
 derived = query MSE after adaptation at equal client-visit budget."""
 import functools
 
@@ -24,7 +28,10 @@ def run():
     rows = []
 
     def final(out):
-        return f"mse={out['history'][-1]['query_loss']:.3f}"
+        s = f"mse={out['history'][-1]['query_loss']:.3f}"
+        if "comm_bytes" in out:
+            s += f" comm_mb={out['comm_bytes']/1e6:.1f}"
+        return s
 
     out, us = timed(lambda: tinyreptile_train(
         LOSS, params, dist, rounds=VISITS, alpha=1.0, beta=0.02, support=32,

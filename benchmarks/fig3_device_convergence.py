@@ -2,7 +2,9 @@
 (reduced numerical precision). The MCU gate is simulated by casting
 weights to bfloat16 after every update — reproducing the paper's finding
 that Reptile's batched gradients degrade MORE at low precision than
-TinyReptile's per-sample updates. derived = query MSE fp32 vs bf16."""
+TinyReptile's per-sample updates. Both algorithms run on the shared
+federated round engine (repro.core.engine).
+derived = query MSE fp32 vs bf16."""
 import functools
 
 import jax

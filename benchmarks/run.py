@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.fig3_device_convergence",
     "benchmarks.fig4_omniglot_kws",
     "benchmarks.table34_round_time",
+    "benchmarks.engine_bench",
     "benchmarks.fig56_hyperparams",
     "benchmarks.kernels_bench",
     "benchmarks.podclient_collectives",

@@ -4,7 +4,10 @@ On the paper's hardware TinyReptile's local training is up to 16x faster
 (no batch stacking / reuse). Here the same effect appears as fewer
 sample-gradient evaluations per round: TinyReptile does S single-sample
 steps; Reptile does E epochs x S-sample batches (E*S sample-grads).
-derived = local train time + speedup ratio."""
+
+The local client work is timed through the SAME strategy hooks the round
+engine executes (FedStrategy.client_update), so these numbers are the
+engine's per-client costs. derived = local train time + speedup ratio."""
 import functools
 
 import jax
@@ -13,7 +16,7 @@ import numpy as np
 
 from benchmarks.common import timed
 from repro.configs.paper_models import PAPER_MODELS
-from repro.core.meta import finetune_batch, finetune_online
+from repro.core.strategies import ReptileStrategy, TinyReptileStrategy
 from repro.data import KWSTasks, OmniglotTasks, SineTasks
 from repro.models.paper_nets import init_paper_model, paper_model_loss
 
@@ -25,22 +28,23 @@ S = 32
 def run():
     rows = []
     rng = np.random.default_rng(0)
+    beta = jnp.float32(0.01)
     for name, cfg in PAPER_MODELS.items():
         loss = functools.partial(paper_model_loss, cfg)
+        tiny = TinyReptileStrategy(loss)
+        rep = ReptileStrategy(loss, epochs=8)
         params = init_paper_model(cfg, jax.random.PRNGKey(0))
         task = DISTS[name].sample_task(rng)
         sup = task.support_batch(rng, S)
-        xs = jnp.asarray(sup["x"])
-        ys = jnp.asarray(sup["y"])
-        batch = {"x": xs, "y": ys}
+        batch = {"x": jnp.asarray(sup["x"]), "y": jnp.asarray(sup["y"])}
 
         _, us_tiny = timed(
             lambda: jax.block_until_ready(
-                finetune_online(loss, params, xs, ys, jnp.float32(0.01))[0]),
+                tiny.client_update(params, batch, beta)[0]),
             repeats=5)
         _, us_rep = timed(
             lambda: jax.block_until_ready(
-                finetune_batch(loss, params, batch, 8, jnp.float32(0.01))[0]),
+                rep.client_update(params, batch, beta)[0]),
             repeats=5)
         rows.append((f"table34/{name}_tinyreptile_local", us_tiny,
                      f"ms={us_tiny/1e3:.2f}"))

@@ -5,6 +5,10 @@ meta-learning problem with the paper's exact 1->32->32->1 MLP (1,153
 params), then adapts each to an unseen client with 8 samples / 8 SGD
 steps and prints the query MSE.
 
+Every algorithm here is a strategy on the shared federated round engine
+(repro.core.engine); the final section swaps the transport for an int8
+CommChannel to show a 4x cheaper (and still converging) federated link.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import functools
@@ -14,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_models import SINE_MLP
-from repro.core import (evaluate_init, reptile_train, tinyreptile_train,
-                        transfer_train)
+from repro.core import (CommChannel, evaluate_init, reptile_train,
+                        tinyreptile_train, transfer_train)
 from repro.data import SineTasks
 from repro.models.paper_nets import (init_paper_model, paper_model_apply,
                                      paper_model_loss, param_count)
@@ -57,6 +61,16 @@ def main():
     preds = paper_model_apply(SINE_MLP, tr["params"], xs)
     print("transfer model predicts ~0 for all x:",
           np.round(np.asarray(preds[:, 0]), 2))
+
+    # beyond the paper: the same engine over a quantized int8 transport
+    # (TIFeD direction) — 4x fewer bytes on the wire, still converges
+    q = tinyreptile_train(LOSS, params, dist, rounds=ROUNDS, alpha=1.0,
+                          beta=0.02, support=32, eval_every=ROUNDS,
+                          eval_kwargs=EVAL, seed=1,
+                          channel=CommChannel("int8"))
+    print(f"TinyReptile int8: query MSE after adaptation = "
+          f"{q['history'][-1]['query_loss']:.3f} "
+          f"(comm = {q['comm_bytes']/1e6:.1f} MB)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,33 @@
-"""The paper's contribution: TinyReptile + every baseline it compares to."""
+"""The paper's contribution: TinyReptile + every baseline it compares to,
+all running on ONE strategy-based federated round engine.
+
+Architecture (post engine refactor):
+
+  engine.py      — ``run_federated``: the single server loop. Owns client
+                   sampling, CommChannel byte accounting (fp32/fp16/int8),
+                   linear annealing, eval cadence, and history. Executes
+                   rounds on-device: vmap across clients_per_round,
+                   lax.scan across the rounds between evals, donated
+                   parameter buffers, Pallas server update on TPU.
+  strategies.py  — ``FedStrategy`` objects: each algorithm reduced to
+                   ``client_update`` + ``server_aggregate`` hooks.
+  tinyreptile.py, reptile.py, fedavg.py, transfer.py
+                 — thin, signature-stable entry points binding a strategy
+                   to the engine (the public ``*_train`` API).
+  meta.py        — shared substrate: inner loops (finetune_online /
+                   finetune_batch) and the paper's evaluation protocol.
+  federated.py   — mesh-scale pod-client mode (pods as federated
+                   clients via shard_map).
+
+A new algorithm or transport policy is one strategy / CommChannel
+object, not a new file-long loop.
+"""
+from repro.core.engine import CommChannel, run_federated  # noqa: F401
 from repro.core.fedavg import fedavg_train, fedsgd_train  # noqa: F401
 from repro.core.meta import evaluate_init, finetune_batch, finetune_online  # noqa: F401
 from repro.core.reptile import reptile_train  # noqa: F401
+from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,  # noqa: F401
+                                   FedStrategy, ReptileStrategy,
+                                   TinyReptileStrategy, TransferStrategy)
 from repro.core.tinyreptile import tinyreptile_train  # noqa: F401
 from repro.core.transfer import transfer_train  # noqa: F401

@@ -1,16 +1,17 @@
 """FedAVG and FedSGD [McMahan et al. 2016] — the traditional-FL baselines
 the paper shows FAIL in the meta-learning (heterogeneous-client) regime
 (Fig. 2): their objective is Eq. (2) (one model good for all clients NOW),
-not Eq. (1) (a model that adapts)."""
+not Eq. (1) (a model that adapts).
+
+Both are thin bindings of the shared round engine (repro.core.engine):
+the per-client work runs vmapped across the sampled cohort, the rounds
+between evals run as one on-device scan."""
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.meta import evaluate_init, finetune_batch, tree_bytes
+from repro.core.engine import CommChannel, run_federated
+from repro.core.strategies import FedAvgStrategy, FedSGDStrategy
 from repro.data.tasks import TaskDistribution
 
 
@@ -19,31 +20,14 @@ def fedavg_train(loss_fn: Callable, init_params,
                  rounds: int = 1000, beta: float = 0.01, support: int = 32,
                  epochs: int = 8, clients_per_round: int = 8, seed: int = 0,
                  eval_every: int = 0,
-                 eval_kwargs: Optional[dict] = None) -> Dict:
+                 eval_kwargs: Optional[dict] = None,
+                 channel: Optional[CommChannel] = None) -> Dict:
     """FedAVG: clients run E local epochs; server averages the MODELS."""
-    rng = np.random.default_rng(seed)
-    phi = init_params
-    history: List[Dict] = []
-    pbytes = tree_bytes(phi)
-    comm_bytes = 0
-    for rnd in range(rounds):
-        acc = None
-        for _ in range(clients_per_round):
-            task = task_dist.sample_task(rng)
-            comm_bytes += 2 * pbytes
-            sup = task.support_batch(rng, support)
-            phi_c, _ = finetune_batch(loss_fn, phi, sup, epochs,
-                                      jnp.float32(beta))
-            acc = phi_c if acc is None else jax.tree.map(
-                lambda a, b: a + b, acc, phi_c)
-        phi = jax.tree.map(lambda a: a / clients_per_round, acc)
-        if eval_every and (rnd + 1) % eval_every == 0:
-            ev = evaluate_init(loss_fn, phi, task_dist,
-                               np.random.default_rng(10_000 + rnd),
-                               **(eval_kwargs or {}))
-            ev.update(round=rnd + 1, comm_bytes=comm_bytes)
-            history.append(ev)
-    return {"params": phi, "history": history, "comm_bytes": comm_bytes}
+    return run_federated(
+        init_params, task_dist, FedAvgStrategy(loss_fn, epochs=epochs),
+        rounds=rounds, clients_per_round=clients_per_round, alpha=1.0,
+        beta=beta, support=support, anneal=False, seed=seed,
+        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel)
 
 
 def fedsgd_train(loss_fn: Callable, init_params,
@@ -51,29 +35,11 @@ def fedsgd_train(loss_fn: Callable, init_params,
                  rounds: int = 1000, beta: float = 0.01, support: int = 32,
                  clients_per_round: int = 8, seed: int = 0,
                  eval_every: int = 0,
-                 eval_kwargs: Optional[dict] = None) -> Dict:
+                 eval_kwargs: Optional[dict] = None,
+                 channel: Optional[CommChannel] = None) -> Dict:
     """FedSGD: each client sends ONE gradient; server applies the mean."""
-    rng = np.random.default_rng(seed)
-    phi = init_params
-    history: List[Dict] = []
-    pbytes = tree_bytes(phi)
-    comm_bytes = 0
-    grad_fn = jax.jit(jax.grad(loss_fn))
-    for rnd in range(rounds):
-        gacc = None
-        for _ in range(clients_per_round):
-            task = task_dist.sample_task(rng)
-            comm_bytes += 2 * pbytes
-            sup = task.support_batch(rng, support)
-            g = grad_fn(phi, sup)
-            gacc = g if gacc is None else jax.tree.map(
-                lambda a, b: a + b, gacc, g)
-        phi = jax.tree.map(lambda p, g: p - beta * g / clients_per_round,
-                           phi, gacc)
-        if eval_every and (rnd + 1) % eval_every == 0:
-            ev = evaluate_init(loss_fn, phi, task_dist,
-                               np.random.default_rng(10_000 + rnd),
-                               **(eval_kwargs or {}))
-            ev.update(round=rnd + 1, comm_bytes=comm_bytes)
-            history.append(ev)
-    return {"params": phi, "history": history, "comm_bytes": comm_bytes}
+    return run_federated(
+        init_params, task_dist, FedSGDStrategy(loss_fn),
+        rounds=rounds, clients_per_round=clients_per_round, alpha=1.0,
+        beta=beta, support=support, anneal=False, seed=seed,
+        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel)

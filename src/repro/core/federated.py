@@ -31,6 +31,26 @@ from jax.sharding import PartitionSpec as P
 from repro.runtime.sharding import param_spec as param_spec_rule, _path_str
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes_names):
+    """Version-portable shard_map: manual over `manual_axes_names`, GSPMD
+    auto over every other mesh axis.
+
+    Newer JAX exposes ``jax.shard_map(..., axis_names=...)`` (manual axes
+    named directly); older releases only have
+    ``jax.experimental.shard_map.shard_map(..., auto=...)`` (auto axes
+    named, i.e. the complement). Resolve whichever exists.
+    """
+    manual = frozenset(manual_axes_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False,
+                             axis_names=set(manual))
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)
+
+
 def make_pod_client_meta_step(model, mesh, *, beta: float = 0.01,
                               alpha: float = 0.5) -> Callable:
     """TinyReptile round with pods as clients. batch: (K, mb, S) arrays
@@ -41,12 +61,21 @@ def make_pod_client_meta_step(model, mesh, *, beta: float = 0.01,
     if "pod" not in mesh.axis_names:
         raise ValueError("pod-client mode needs the multi-pod mesh")
 
+    # Partial-auto shard_map (manual "pod", GSPMD auto data/model) needs
+    # the modern jax.shard_map; the experimental fallback miscompiles
+    # partial-manual subgroups (XLA CHECK IsManualSubgroup), so there we
+    # go fully manual: every device in a pod computes the pod's whole
+    # client batch (replicated instead of data-sharded) — identical
+    # numerics, just without intra-pod data parallelism.
+    partial_auto = hasattr(jax, "shard_map")
+    manual = ("pod",) if partial_auto else tuple(mesh.axis_names)
+
     def loss_of(phi, micro):
         return model.loss_fn(phi, micro)
 
     def round_body(phi, batch):
         # runs per-pod (manual over "pod"; auto over data/model);
-        # internal constraints must not mention the manual axis
+        # internal constraints must not mention the manual axes
         from repro.runtime.shardctx import manual_axes
 
         def inner(phi_hat, micro):
@@ -59,7 +88,7 @@ def make_pod_client_meta_step(model, mesh, *, beta: float = 0.01,
                 phi_hat, g)
             return phi_hat, loss
 
-        with manual_axes("pod"):
+        with manual_axes(*manual):
             phi_hat, losses = jax.lax.scan(inner, phi, batch)
             # pseudo-gradient; cross-pod exchange happens ONCE here
             delta = jax.tree.map(lambda q, p: q - p, phi_hat, phi)
@@ -81,9 +110,9 @@ def make_pod_client_meta_step(model, mesh, *, beta: float = 0.01,
             jax.tree.map(lambda x: P(None, "pod"), batch),
         )
         out_specs = (jax.tree.map(lambda x: P(), phi), P())
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             round_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False, axis_names={"pod"})
+            manual_axes_names=set(manual))
         return fn(phi, batch)
 
     return step

@@ -3,17 +3,17 @@ the paper's main comparison (Figs. 2-4, Tables II-IV).
 
 Difference from TinyReptile: the client trains on its ENTIRE support set
 in batch for E epochs (data stored and reused — the resource cost the
-paper measures in Table II)."""
+paper measures in Table II).
+
+The loop lives in the shared round engine (repro.core.engine); with
+clients_per_round > 1 the per-client inner loops run vmapped on-device
+instead of one Python iteration per client."""
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.meta import (evaluate_init, finetune_batch, tree_bytes,
-                             tree_lerp)
+from repro.core.engine import CommChannel, run_federated
+from repro.core.strategies import ReptileStrategy
 from repro.data.tasks import TaskDistribution
 
 
@@ -23,37 +23,13 @@ def reptile_train(loss_fn: Callable, init_params,
                   support: int = 32, epochs: int = 8,
                   clients_per_round: int = 1, anneal: bool = True,
                   seed: int = 0, eval_every: int = 0,
-                  eval_kwargs: Optional[dict] = None) -> Dict:
+                  eval_kwargs: Optional[dict] = None,
+                  channel: Optional[CommChannel] = None) -> Dict:
     """clients_per_round == 1 -> serial Reptile; > 1 -> batched Reptile
     (server averages the per-client pseudo-gradients; requires concurrent
     connections to all sampled clients — the cost the paper calls out)."""
-    rng = np.random.default_rng(seed)
-    phi = init_params
-    history: List[Dict] = []
-    pbytes = tree_bytes(phi)
-    comm_bytes = 0
-
-    for rnd in range(rounds):
-        alpha_t = alpha * (1 - rnd / rounds) if anneal else alpha
-        deltas = None
-        inner_loss = 0.0
-        for _ in range(clients_per_round):
-            task = task_dist.sample_task(rng)
-            comm_bytes += 2 * pbytes
-            sup = task.support_batch(rng, support)
-            phi_hat, losses = finetune_batch(loss_fn, phi, sup, epochs,
-                                             jnp.float32(beta))
-            inner_loss += float(losses.mean()) / clients_per_round
-            d = jax.tree.map(lambda q, p: q - p, phi_hat, phi)
-            deltas = d if deltas is None else jax.tree.map(
-                lambda a, b: a + b, deltas, d)
-        phi = jax.tree.map(
-            lambda p, d: p + alpha_t * d / clients_per_round, phi, deltas)
-        if eval_every and (rnd + 1) % eval_every == 0:
-            ev = evaluate_init(loss_fn, phi, task_dist,
-                               np.random.default_rng(10_000 + rnd),
-                               **(eval_kwargs or {}))
-            ev.update(round=rnd + 1, comm_bytes=comm_bytes,
-                      inner_loss=inner_loss)
-            history.append(ev)
-    return {"params": phi, "history": history, "comm_bytes": comm_bytes}
+    return run_federated(
+        init_params, task_dist, ReptileStrategy(loss_fn, epochs=epochs),
+        rounds=rounds, clients_per_round=clients_per_round, alpha=alpha,
+        beta=beta, support=support, anneal=anneal, seed=seed,
+        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel)

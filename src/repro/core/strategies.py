@@ -1,0 +1,141 @@
+"""Federated strategies: each core/ algorithm as two pure-JAX hooks.
+
+A ``FedStrategy`` tells the round engine (repro.core.engine) WHAT a
+client computes and HOW the server folds the results back; the engine
+owns everything else (sampling, scanning, metering, annealing, eval).
+Both hooks must be jax-traceable — ``client_update`` runs under
+``vmap`` across the round's clients inside a ``lax.scan`` over rounds:
+
+  client_update(phi, client_batch, beta) -> (result_tree, inner_losses)
+      phi: broadcast parameters; client_batch: {"x","y"} with leading
+      support dim; beta: client learning rate (fp32 scalar).
+  server_aggregate(phi, client_results, alpha_t, beta) -> phi
+      client_results: result_tree with a leading clients_per_round axis;
+      alpha_t: the (possibly annealed) server rate for this round.
+
+A new algorithm is one strategy object — not a new file-long loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import meta_interpolate
+from repro.core.meta import finetune_batch, finetune_online
+
+
+def reptile_aggregate(phi, phi_hats, alpha_t, *,
+                      use_pallas: Optional[bool] = None):
+    """Server update shared by TinyReptile (C=1) and batched Reptile:
+    phi <- phi + alpha_t * (mean_c(phi_hat_c) - phi). The client mean is
+    taken in fp32; the interpolation (dtype policy, Pallas routing) is
+    engine.meta_interpolate's."""
+    mean = jax.tree.map(
+        lambda q: jnp.mean(q.astype(jnp.float32), axis=0), phi_hats)
+    return meta_interpolate(phi, mean, alpha_t, use_pallas=use_pallas)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedStrategy:
+    """Base strategy. Subclasses set the class attributes and hooks."""
+    loss_fn: Callable
+
+    data_mode = "batch"          # "batch" | "stream" client data layout
+    meters_comm = True           # account CommChannel bytes + report them
+    tracks_inner_loss = False    # report last-round client loss at evals
+
+    def client_update(self, phi, client_batch, beta):
+        raise NotImplementedError
+
+    def server_aggregate(self, phi, client_results, alpha_t, beta):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyReptileStrategy(FedStrategy):
+    """Paper Algorithm 1: the client consumes its support STREAM one
+    sample at a time (online SGD); the server interpolates toward the
+    returned phi_hat."""
+    use_pallas: Optional[bool] = None
+
+    data_mode = "stream"
+    tracks_inner_loss = True
+
+    def client_update(self, phi, client_batch, beta):
+        return finetune_online(self.loss_fn, phi,
+                               client_batch["x"], client_batch["y"], beta)
+
+    def server_aggregate(self, phi, client_results, alpha_t, beta):
+        return reptile_aggregate(phi, client_results, alpha_t,
+                                 use_pallas=self.use_pallas)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReptileStrategy(FedStrategy):
+    """Reptile [Nichol et al. 2018]: the client trains on its whole
+    support set for E epochs; server averages pseudo-gradients. C=1 is
+    serial Reptile, C>1 batched Reptile."""
+    epochs: int = 8
+    use_pallas: Optional[bool] = None
+
+    tracks_inner_loss = True
+
+    def client_update(self, phi, client_batch, beta):
+        return finetune_batch(self.loss_fn, phi, client_batch,
+                              self.epochs, beta)
+
+    def server_aggregate(self, phi, client_results, alpha_t, beta):
+        return reptile_aggregate(phi, client_results, alpha_t,
+                                 use_pallas=self.use_pallas)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgStrategy(FedStrategy):
+    """FedAVG [McMahan et al. 2016]: E local epochs, server averages the
+    MODELS (the Eq.-2 objective the paper shows failing in the meta
+    regime)."""
+    epochs: int = 8
+
+    def client_update(self, phi, client_batch, beta):
+        return finetune_batch(self.loss_fn, phi, client_batch,
+                              self.epochs, beta)
+
+    def server_aggregate(self, phi, client_results, alpha_t, beta):
+        n = jax.tree.leaves(client_results)[0].shape[0]
+        return jax.tree.map(lambda q: q.sum(0) / n, client_results)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSGDStrategy(FedStrategy):
+    """FedSGD: every client ships ONE gradient; the server applies the
+    mean with the client rate beta."""
+
+    def client_update(self, phi, client_batch, beta):
+        loss, g = jax.value_and_grad(self.loss_fn)(phi, client_batch)
+        return g, loss
+
+    def server_aggregate(self, phi, client_results, alpha_t, beta):
+        n = jax.tree.leaves(client_results)[0].shape[0]
+        return jax.tree.map(
+            lambda p, g: p - beta * g.sum(0) / n, phi, client_results)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferStrategy(FedStrategy):
+    """Joint-training baseline (paper Fig. 1): clients just forward their
+    raw batches; the server takes one SGD step on the pooled data. No
+    federation, so no comm accounting."""
+
+    meters_comm = False
+
+    def client_update(self, phi, client_batch, beta):
+        return client_batch, jnp.zeros(())
+
+    def server_aggregate(self, phi, client_results, alpha_t, beta):
+        pooled = jax.tree.map(
+            lambda a: a.reshape(-1, *a.shape[2:]), client_results)
+        g = jax.grad(self.loss_fn)(phi, pooled)
+        return jax.tree.map(lambda w, gg: w - beta * gg, phi, g)

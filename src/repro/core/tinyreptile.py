@@ -11,16 +11,17 @@ Per round:
 
 Optionally the server learning rate anneals linearly (Appendix A notes
 annealing helps; the Reptile paper uses it too).
+
+The loop itself lives in the shared round engine (repro.core.engine);
+this module only binds the TinyReptile strategy. `channel` selects the
+transport (fp32/fp16/int8 byte accounting + optional quantization).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.meta import (evaluate_init, finetune_online, tree_bytes,
-                             tree_lerp)
+from repro.core.engine import CommChannel, run_federated
+from repro.core.strategies import TinyReptileStrategy
 from repro.data.tasks import TaskDistribution
 
 
@@ -30,36 +31,13 @@ def tinyreptile_train(loss_fn: Callable, init_params,
                       beta: float = 0.01, support: int = 32,
                       anneal: bool = True, seed: int = 0,
                       eval_every: int = 0, eval_kwargs: Optional[dict] = None,
-                      use_pallas: bool = False) -> Dict:
-    """Returns {"params", "history"}; history rows are per-eval dicts."""
-    rng = np.random.default_rng(seed)
-    phi = init_params
-    history: List[Dict] = []
-    pbytes = tree_bytes(phi)
-    comm_bytes = 0
-
-    for rnd in range(rounds):
-        alpha_t = alpha * (1 - rnd / rounds) if anneal else alpha
-        task = task_dist.sample_task(rng)                       # step 6
-        comm_bytes += pbytes                                    # send phi
-        # the client consumes its stream sample-by-sample (step 8-10);
-        # we buffer to arrays only to drive lax.scan — semantics identical
-        xs, ys = zip(*task.support_stream(rng, support))
-        phi_hat, inner_losses = finetune_online(
-            loss_fn, phi, jnp.stack(xs), jnp.stack(ys), jnp.float32(beta))
-        comm_bytes += pbytes                                    # return phi_hat
-        if use_pallas:
-            from repro.kernels import ops as kops
-            import jax
-            phi = jax.tree.map(
-                lambda p, q: kops.meta_update(p, q, alpha_t), phi, phi_hat)
-        else:
-            phi = tree_lerp(phi, phi_hat, alpha_t)              # step 12
-        if eval_every and (rnd + 1) % eval_every == 0:
-            ev = evaluate_init(loss_fn, phi, task_dist,
-                               np.random.default_rng(10_000 + rnd),
-                               **(eval_kwargs or {}))
-            ev.update(round=rnd + 1, comm_bytes=comm_bytes,
-                      inner_loss=float(inner_losses.mean()))
-            history.append(ev)
-    return {"params": phi, "history": history, "comm_bytes": comm_bytes}
+                      use_pallas: Optional[bool] = None,
+                      channel: Optional[CommChannel] = None) -> Dict:
+    """Returns {"params", "history", "comm_bytes"}; history rows are
+    per-eval dicts."""
+    return run_federated(
+        init_params, task_dist,
+        TinyReptileStrategy(loss_fn, use_pallas=use_pallas),
+        rounds=rounds, clients_per_round=1, alpha=alpha, beta=beta,
+        support=support, anneal=anneal, seed=seed, eval_every=eval_every,
+        eval_kwargs=eval_kwargs, channel=channel)

@@ -1,15 +1,16 @@
 """Transfer-learning / joint-training baseline (paper Fig. 1): train one
 model on pooled data from all clients — Eq. (2). In the sine example this
-converges to E_t[f_t(x)] ~ 0, demonstrating why meta-learning is needed."""
+converges to E_t[f_t(x)] ~ 0, demonstrating why meta-learning is needed.
+
+Expressed on the shared round engine as the degenerate strategy whose
+clients forward raw batches and whose server takes one SGD step on the
+pool (no federation -> no comm accounting)."""
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.meta import evaluate_init
+from repro.core.engine import run_federated
+from repro.core.strategies import TransferStrategy
 from repro.data.tasks import TaskDistribution
 
 
@@ -19,25 +20,9 @@ def transfer_train(loss_fn: Callable, init_params,
                    batch_per_round: int = 32, tasks_per_round: int = 8,
                    seed: int = 0, eval_every: int = 0,
                    eval_kwargs: Optional[dict] = None) -> Dict:
-    rng = np.random.default_rng(seed)
-    phi = init_params
-    history: List[Dict] = []
-    step = jax.jit(lambda p, b, lr: jax.tree.map(
-        lambda w, g: w - lr * g, p, jax.grad(loss_fn)(p, b)))
     per_task = max(batch_per_round // tasks_per_round, 1)
-    for rnd in range(rounds):
-        xs, ys = [], []
-        for _ in range(tasks_per_round):
-            task = task_dist.sample_task(rng)
-            b = task.support_batch(rng, per_task)
-            xs.append(b["x"])
-            ys.append(b["y"])
-        batch = {"x": np.concatenate(xs), "y": np.concatenate(ys)}
-        phi = step(phi, batch, jnp.float32(beta))
-        if eval_every and (rnd + 1) % eval_every == 0:
-            ev = evaluate_init(loss_fn, phi, task_dist,
-                               np.random.default_rng(10_000 + rnd),
-                               **(eval_kwargs or {}))
-            ev.update(round=rnd + 1)
-            history.append(ev)
-    return {"params": phi, "history": history}
+    return run_federated(
+        init_params, task_dist, TransferStrategy(loss_fn),
+        rounds=rounds, clients_per_round=tasks_per_round, alpha=0.0,
+        beta=beta, support=per_task, anneal=False, seed=seed,
+        eval_every=eval_every, eval_kwargs=eval_kwargs)

@@ -89,6 +89,8 @@ def shard(x, *logical):
     mesh = current_mesh()
     if mesh is None:
         return x
+    if set(_manual()) >= set(mesh.axis_names):
+        return x  # fully-manual shard_map: no GSPMD constraints apply
     resolved = []
     for dim, l in zip(x.shape, logical):
         ax = resolve_axis(l, mesh)

@@ -1,13 +1,16 @@
 """Step builders: the paper's technique (TinyReptile round) as the
 production train step, plus joint-training baseline, prefill, and decode.
 
-``make_meta_train_step`` is TinyReptile at mesh scale:
-  - the inner loop is a lax.scan of K streaming SGD steps (the paper's
+``make_meta_train_step`` is TinyReptile at mesh scale — COHORT mode: the
+data-parallel section of the mesh acts as one composite client. The
+round body is built from the federated engine's building blocks
+(repro.core.engine):
+  - ``streaming_sgd``: a lax.scan of K streaming SGD steps (the paper's
     online learning: one microbatch per step, discarded immediately);
-  - the client cohort is the data-parallel section of the mesh, so each
-    inner step's gradient is the cohort all-reduce (batched-Reptile
-    semantics, paper Fig. 2);
-  - the outer update is the Reptile interpolation phi <- phi + a(phi_hat - phi).
+    each inner step's gradient is the cohort all-reduce
+    (batched-Reptile semantics, paper Fig. 2);
+  - ``meta_interpolate``: the Reptile server update
+    phi <- phi + a (phi_hat - phi), Pallas-fused where available.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ from typing import Any, Callable, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import meta_interpolate, streaming_sgd
 from repro.runtime.shardctx import shard
 
 
@@ -32,35 +36,9 @@ def make_meta_train_step(model, *, beta: float = 0.01, alpha: float = 0.5,
 
     def step(phi, batch, alpha=alpha):
         # alpha may be a traced scalar (annealed server rate) — one compile
-        def inner(phi_hat, micro):
-            loss, g = jax.value_and_grad(loss_of)(phi_hat, micro)
-            phi_hat = jax.tree.map(
-                lambda p, gg: (p.astype(jnp.float32)
-                               - beta * gg.astype(jnp.float32)).astype(p.dtype),
-                phi_hat, g)
-            return phi_hat, loss
-
-        from repro.runtime.flags import probe_mode
-        if probe_mode():
-            k = jax.tree.leaves(batch)[0].shape[0]
-            phi_hat, losses = phi, []
-            for i in range(k):
-                micro = jax.tree.map(lambda a: a[i], batch)
-                phi_hat, l = inner(phi_hat, micro)
-                losses.append(l)
-            losses = jnp.stack(losses)
-        else:
-            phi_hat, losses = jax.lax.scan(inner, phi, batch)
-        if use_pallas:
-            from repro.kernels import ops as kops
-            new_phi = jax.tree.map(
-                lambda p, ph: kops.meta_update(p, ph, alpha), phi, phi_hat)
-        else:
-            new_phi = jax.tree.map(
-                lambda p, ph: (p.astype(jnp.float32) + alpha
-                               * (ph.astype(jnp.float32)
-                                  - p.astype(jnp.float32))).astype(p.dtype),
-                phi, phi_hat)
+        phi_hat, losses = streaming_sgd(loss_of, phi, batch, beta)
+        new_phi = meta_interpolate(phi, phi_hat, alpha,
+                                   use_pallas=use_pallas)
         return new_phi, {"loss": losses.mean(), "inner_first": losses[0],
                          "inner_last": losses[-1]}
 

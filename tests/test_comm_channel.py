@@ -1,0 +1,99 @@
+"""CommChannel: transport byte accounting and quantized-payload training.
+
+The channel generalizes the paper's Table-II accounting (fp32 payloads)
+to fp16/int8 wires (int8 motivated by TIFeD's integer-based FL) and can
+simulate the lossy payload in-round.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import SINE_MLP
+from repro.core import CommChannel, tinyreptile_train
+from repro.core.engine import PAYLOAD_ITEMSIZE
+from repro.core.meta import evaluate_init, tree_bytes
+from repro.data import SineTasks
+from repro.models.paper_nets import init_paper_model, paper_model_loss
+
+LOSS = functools.partial(paper_model_loss, SINE_MLP)
+EVAL = dict(num_tasks=6, support=8, k_steps=8, lr=0.02, query=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return init_paper_model(SINE_MLP, jax.random.PRNGKey(0)), SineTasks()
+
+
+def test_payload_bytes_scale_with_itemsize(setup):
+    """fp16/int8 accounting == tree_bytes scaled by the itemsize ratio."""
+    params, _ = setup
+    fp32 = tree_bytes(params)
+    for dtype, itemsize in PAYLOAD_ITEMSIZE.items():
+        ch = CommChannel(dtype)
+        assert ch.payload_bytes(params) == fp32 * itemsize // 4
+        for clients in (1, 5):
+            assert ch.round_bytes(params, clients) == \
+                2 * clients * fp32 * itemsize // 4
+
+
+def test_unknown_payload_dtype_rejected():
+    with pytest.raises(ValueError):
+        CommChannel("int4")
+
+
+def test_run_comm_bytes_scale(setup):
+    """An int8 link meters 4x fewer bytes than fp32 over a whole run,
+    and accounting-only channels (quantize=False) do not perturb the
+    training numerics at all."""
+    params, dist = setup
+    kw = dict(rounds=20, alpha=1.0, beta=0.02, support=8, seed=0,
+              eval_every=10, eval_kwargs=EVAL)
+    base = tinyreptile_train(LOSS, params, dist, **kw)
+    int8 = tinyreptile_train(LOSS, params, dist,
+                             channel=CommChannel("int8", quantize=False),
+                             **kw)
+    assert int8["comm_bytes"] * 4 == base["comm_bytes"]
+    assert [h["comm_bytes"] * 4 for h in int8["history"]] == \
+        [h["comm_bytes"] for h in base["history"]]
+    for a, b in zip(jax.tree.leaves(base["params"]),
+                    jax.tree.leaves(int8["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_transmit_fp16_roundtrip():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(33,)), jnp.float32)
+    got = CommChannel("float16").transmit({"w": x})["w"]
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(x.astype(jnp.float16), np.float32))
+
+
+def test_transmit_int8_error_bound():
+    """Symmetric int8: per-leaf error <= scale/2 = max|x|/254."""
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(size=(257,)), jnp.float32)
+    got = CommChannel("int8").transmit({"w": x})["w"]
+    bound = float(jnp.abs(x).max()) / 254.0 + 1e-6
+    assert float(jnp.abs(got - x).max()) <= bound
+    # fp32 channel is the identity
+    same = CommChannel().transmit({"w": x})["w"]
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(x))
+
+
+def test_quantized_transport_tinyreptile_converges(setup):
+    """TinyReptile over a lossy int8 uplink/downlink still learns an
+    adaptable init on the sine task (paper-claim robustness; the TIFeD
+    direction)."""
+    params, dist = setup
+    base = evaluate_init(LOSS, params, dist, np.random.default_rng(7), **EVAL)
+    out = tinyreptile_train(LOSS, params, dist, rounds=150, alpha=1.0,
+                            beta=0.02, support=32, eval_every=150,
+                            eval_kwargs=EVAL, seed=1,
+                            channel=CommChannel("int8"))
+    final = out["history"][-1]["query_loss"]
+    assert final < base["query_loss"] * 0.6, (final, base)
+    # and it metered a 4x cheaper link
+    assert out["comm_bytes"] == 150 * 2 * tree_bytes(params) // 4

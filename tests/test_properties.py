@@ -1,12 +1,19 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+The suite must collect from a clean environment, so `hypothesis` is an
+optional dependency: these tests skip (not error) when it is absent.
+"""
 import math
 
-import hypothesis
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.meta import tree_lerp
 from repro.kernels import ops
