@@ -1,16 +1,23 @@
-"""Engine speedup tracking: rounds/sec for the pre-refactor per-client
-Python loops vs the scanned/vmapped round engine, on the paper's sine
-task. Acceptance floor (PR 1): >= 3x for batched-client Reptile
-(clients_per_round=8) on CPU.
+"""Engine speedup tracking: rounds/sec for (1) the pre-refactor per-client
+Python loops, (2) the PR-1 synchronous engine (prefetch=0, reference
+per-task sampling), and (3) the pipelined engine (vectorized block
+sampling + double-buffered background prefetch), on the paper's sine
+task. Acceptance floors: engine >= 3x the Python loops (PR 1) and
+pipelined >= 1.5x the synchronous engine (PR 2) for batched-client
+Reptile (clients_per_round=8) on CPU.
 
 Writes BENCH_engine.json next to the repo root (same spirit as the
 results/dryrun JSON cells consumed by benchmarks/report.py) so the
 speedup is tracked across future PRs.
 
-  PYTHONPATH=src python -m benchmarks.engine_bench
+  PYTHONPATH=src python -m benchmarks.engine_bench            # full run
+  PYTHONPATH=src python -m benchmarks.engine_bench --json     # JSON out
+  PYTHONPATH=src python -m benchmarks.engine_bench --rounds 8 --smoke
+                       # tier-1-budget smoke: pipeline on/off only
 """
 from __future__ import annotations
 
+import argparse
 import functools
 import json
 import os
@@ -74,46 +81,105 @@ def _rounds_per_sec(fn, rounds):
     return rounds / (time.perf_counter() - t0)
 
 
-def run():
+def bench(rounds: int = ROUNDS, smoke: bool = False):
+    """Returns (rows, payload). ``smoke`` skips the slow legacy Python
+    loops and only compares pipeline on vs off (tier-1 time budget)."""
     params = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
     dist = SineTasks()
     results = {}
 
+    # engine kwargs: PR-1 synchronous baseline vs the pipelined fast path.
+    # The pipelined config caps blocks so the run splits into >= 4 blocks
+    # and the prefetch thread actually overlaps host sampling of block N+1
+    # with device compute on block N (one monolithic block would
+    # degenerate to inline staging with nothing to overlap) — also at
+    # smoke round counts.
+    sync = dict(prefetch=0, sampler="reference")
+    piped = dict(prefetch=2, sampler="vectorized",
+                 max_block=min(16, max(1, rounds // 4)))
+
     cases = [
         ("tinyreptile",
-         lambda: _python_loop_tinyreptile(params, dist, ROUNDS),
-         lambda: tinyreptile_train(LOSS, params, dist, rounds=ROUNDS,
-                                   alpha=1.0, beta=0.02, support=SUPPORT,
-                                   seed=0)),
+         lambda: _python_loop_tinyreptile(params, dist, rounds),
+         lambda kw: tinyreptile_train(LOSS, params, dist, rounds=rounds,
+                                      alpha=1.0, beta=0.02, support=SUPPORT,
+                                      seed=0, **kw)),
         ("reptile_batched_c8",
-         lambda: _python_loop_reptile(params, dist, ROUNDS, clients=8),
-         lambda: reptile_train(LOSS, params, dist, rounds=ROUNDS, alpha=1.0,
-                               beta=0.02, support=SUPPORT, epochs=8,
-                               clients_per_round=8, seed=0)),
+         lambda: _python_loop_reptile(params, dist, rounds, clients=8),
+         lambda kw: reptile_train(LOSS, params, dist, rounds=rounds,
+                                  alpha=1.0, beta=0.02, support=SUPPORT,
+                                  epochs=8, clients_per_round=8, seed=0,
+                                  **kw)),
     ]
+    def synced(engine_fn, kw):
+        # the engine returns as soon as the last block is dispatched;
+        # block on the result so device compute is inside the timing
+        out = engine_fn(kw)
+        return jax.block_until_ready(jax.tree.leaves(out["params"])[0])
+
     rows = []
     for name, legacy_fn, engine_fn in cases:
-        legacy_rps = _rounds_per_sec(legacy_fn, ROUNDS)
-        engine_rps = _rounds_per_sec(engine_fn, ROUNDS)
-        speedup = engine_rps / legacy_rps
-        results[name] = {"python_loop_rounds_per_sec": round(legacy_rps, 2),
-                         "engine_rounds_per_sec": round(engine_rps, 2),
-                         "speedup": round(speedup, 2)}
-        rows.append((f"engine/{name}_python_loop", 1e6 / legacy_rps,
-                     f"rounds_per_sec={legacy_rps:.1f}"))
-        rows.append((f"engine/{name}_engine", 1e6 / engine_rps,
-                     f"rounds_per_sec={engine_rps:.1f} "
-                     f"speedup={speedup:.2f}x"))
+        sync_rps = _rounds_per_sec(lambda: synced(engine_fn, sync), rounds)
+        piped_rps = _rounds_per_sec(lambda: synced(engine_fn, piped), rounds)
+        pipeline_speedup = piped_rps / sync_rps
+        res = {"engine_sync_rounds_per_sec": round(sync_rps, 2),
+               "engine_pipelined_rounds_per_sec": round(piped_rps, 2),
+               "pipeline_speedup": round(pipeline_speedup, 2)}
+        if not smoke:
+            legacy_rps = _rounds_per_sec(legacy_fn, rounds)
+            res["python_loop_rounds_per_sec"] = round(legacy_rps, 2)
+            res["engine_speedup"] = round(sync_rps / legacy_rps, 2)
+            res["pipelined_vs_python_loop"] = round(piped_rps / legacy_rps, 2)
+            rows.append((f"engine/{name}_python_loop", 1e6 / legacy_rps,
+                         f"rounds_per_sec={legacy_rps:.1f}"))
+        results[name] = res
+        rows.append((f"engine/{name}_engine_sync", 1e6 / sync_rps,
+                     f"rounds_per_sec={sync_rps:.1f}"))
+        rows.append((f"engine/{name}_engine_pipelined", 1e6 / piped_rps,
+                     f"rounds_per_sec={piped_rps:.1f} "
+                     f"pipeline_speedup={pipeline_speedup:.2f}x"))
 
     payload = {"bench": "engine", "status": "OK", "backend":
-               jax.default_backend(), "rounds": ROUNDS, "support": SUPPORT,
-               "results": results}
+               jax.default_backend(), "rounds": rounds, "support": SUPPORT,
+               "smoke": smoke, "results": results}
+    return rows, payload
+
+
+def run():
+    """benchmarks.run contract: full bench, write BENCH_engine.json,
+    return the CSV rows."""
+    rows, payload = bench()
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--json", action="store_true",
+                    help="print the result payload as JSON on stdout")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny pipeline-on/off check: skips the legacy "
+                         "Python-loop baselines and does not overwrite "
+                         "BENCH_engine.json")
+    args = ap.parse_args()
+
+    rows, payload = bench(rounds=args.rounds, smoke=args.smoke)
+    # only the canonical config may update the tracked record — a quick
+    # --rounds 8 iteration must not clobber the 120-round numbers the
+    # acceptance thresholds are judged against
+    if not args.smoke and args.rounds == ROUNDS:
+        with open(OUT_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    if args.json:
+        print(json.dumps(payload, indent=2))
+    else:
+        from benchmarks.common import emit
+        emit(rows)
+
+
 if __name__ == "__main__":
-    from benchmarks.common import emit
-    emit(run())
+    main()

@@ -4,11 +4,17 @@ all running on ONE strategy-based federated round engine.
 Architecture (post engine refactor):
 
   engine.py      — ``run_federated``: the single server loop. Owns client
-                   sampling, CommChannel byte accounting (fp32/fp16/int8),
-                   linear annealing, eval cadence, and history. Executes
-                   rounds on-device: vmap across clients_per_round,
-                   lax.scan across the rounds between evals, donated
-                   parameter buffers, Pallas server update on TPU.
+                   sampling, CommChannel byte accounting (fp32/fp16/int8,
+                   plus TinyMetaFed-style partial fractions), linear
+                   annealing, eval cadence, and history. Executes rounds
+                   on-device as fixed-shape masked blocks: vmap across
+                   clients_per_round, lax.scan across the rounds between
+                   evals, donated parameter buffers, one jit trace per
+                   config, Pallas server update on TPU.
+  pipeline.py    — the host side: block planning (retrace-free padded
+                   shapes), background prefetch (stage block N+1 while
+                   the device runs block N), and pluggable
+                   ``SamplingPolicy`` client sampling.
   strategies.py  — ``FedStrategy`` objects: each algorithm reduced to
                    ``client_update`` + ``server_aggregate`` hooks.
   tinyreptile.py, reptile.py, fedavg.py, transfer.py
@@ -22,8 +28,12 @@ Architecture (post engine refactor):
 A new algorithm or transport policy is one strategy / CommChannel
 object, not a new file-long loop.
 """
-from repro.core.engine import CommChannel, run_federated  # noqa: F401
+from repro.core.engine import (CommChannel, PartialCommChannel,  # noqa: F401
+                               clear_runner_cache, run_federated,
+                               runner_cache_stats)
 from repro.core.fedavg import fedavg_train, fedsgd_train  # noqa: F401
+from repro.core.pipeline import (BlockPrefetcher, SamplingPolicy,  # noqa: F401
+                                 UniformSampling, plan_blocks)
 from repro.core.meta import evaluate_init, finetune_batch, finetune_online  # noqa: F401
 from repro.core.reptile import reptile_train  # noqa: F401
 from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,  # noqa: F401

@@ -1,4 +1,4 @@
-"""The federated round engine: one loop for every core/ algorithm.
+"""The federated round engine: one pipelined loop for every core/ algorithm.
 
 Historically each algorithm file (tinyreptile, reptile, fedavg, fedsgd,
 transfer) hand-rolled the same Python-side server loop — client sampling,
@@ -11,16 +11,28 @@ dispatch per client per round. This module owns all of that once:
   algorithm-specific hooks: ``client_update`` (what one device does with
   the broadcast parameters and its local data) and ``server_aggregate``
   (how the server folds the client results back into phi).
-* The engine samples clients on the host (NumPy RNG, in the exact order
-  the legacy loops used, so seeded runs are reproducible), then executes
-  whole blocks of rounds on-device: ``jax.vmap`` across the
+* Rounds execute as fixed-shape on-device blocks: ``jax.vmap`` across the
   clients_per_round axis and ``jax.lax.scan`` across the rounds between
-  evals, with the parameter buffers donated between blocks. A round is
-  one scan step, not a Python iteration per client.
+  evals, with the parameter buffers donated between blocks. Every block —
+  including the uneven eval-boundary tail — is padded on the host to ONE
+  per-run length and carries a per-round validity mask (``lax.cond``
+  skips padded rounds at runtime), so the block runner compiles exactly
+  once per (strategy, beta, channel) config; ``_BlockRunner.trace_count``
+  makes that observable.
+* The host side is a producer/consumer pipeline (repro.core.pipeline):
+  client sampling is a pluggable ``SamplingPolicy`` (uniform i.i.d. by
+  default, with a legacy-exact "reference" RNG order and a vectorized
+  one-allocation fast path), and a background prefetch thread samples and
+  ``device_put``s block N+1 while the device runs block N (double
+  buffered). ``prefetch=0`` is the synchronous escape hatch; pipelined
+  and synchronous runs are bit-for-bit identical because the producer
+  consumes the host RNG in exactly the synchronous block order.
 * A pluggable ``CommChannel`` does the paper's Table-II byte accounting
   for fp32/fp16/int8 payloads and can optionally *simulate* the quantized
-  transport (int8 motivated by TIFeD's integer-based FL), so
-  communication-efficiency variants are a channel object, not a new loop.
+  transport (int8 motivated by TIFeD's integer-based FL).
+  ``PartialCommChannel`` additionally transmits only a per-round
+  parameter FRACTION (TinyMetaFed-style partial communication): masked
+  uplink deltas plus fraction-scaled accounting.
 * The server update routes through the fused Pallas kernel
   (``repro.kernels.ops.meta_update``) by default on TPU backends;
   elsewhere the same fp32 math runs as plain XLA (the kernel would only
@@ -28,12 +40,16 @@ dispatch per client per round. This module owns all of that once:
 
 ``meta_interpolate`` and ``streaming_sgd`` are the engine's round
 building blocks, shared with the mesh-scale cohort step in
-``repro.runtime.steps``.
+``repro.runtime.steps``. Jitted block runners are memoized per
+(strategy, beta, channel); ``runner_cache_stats`` / ``clear_runner_cache``
+expose and reset that cache (long sweeps over many configs would
+otherwise pin up to 64 stale executables).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Dict, List, Optional
 
 import jax
@@ -41,7 +57,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.meta import evaluate_init
+from repro.core.pipeline import (SamplingPolicy, UniformSampling,
+                                 plan_blocks, prefetch_items,
+                                 single_device_of)
 from repro.data.tasks import TaskDistribution
+
+logger = logging.getLogger(__name__)
 
 #: bytes per parameter for each transport payload dtype (paper Table II
 #: generalized: the paper ships fp32; fp16/int8 model compressed uplinks).
@@ -105,15 +126,25 @@ class CommChannel:
     quantize: simulate the lossy payload in-round (cast round-trip for
       fp16, per-leaf symmetric affine quantization for int8). Default:
       quantize iff dtype != float32. Accounting-only studies can set
-      quantize=False to meter a compressed link while training in fp32.
+      quantize=False to meter a compressed link while training in fp32;
+      quantize=True on an fp32 wire is rejected (an exact wire has
+      nothing to simulate).
     """
     dtype: str = "float32"
     quantize: Optional[bool] = None
+
+    #: set on subclasses whose transmit() needs the engine to pass a
+    #: server-side reference tree for the uplink (delta-style transports).
+    needs_uplink_ref = False
 
     def __post_init__(self):
         if self.dtype not in PAYLOAD_ITEMSIZE:
             raise ValueError(f"unknown payload dtype {self.dtype!r}; "
                              f"expected one of {sorted(PAYLOAD_ITEMSIZE)}")
+        if self.quantize and self.dtype == "float32":
+            raise ValueError("quantize=True with an fp32 wire: the payload "
+                             "is exact, there is no quantization to "
+                             "simulate (drop quantize or pick fp16/int8)")
 
     @property
     def simulates_quantization(self) -> bool:
@@ -130,80 +161,227 @@ class CommChannel:
         """Downlink (phi out) + uplink (result back) for every client."""
         return 2 * clients * self.payload_bytes(tree)
 
-    def transmit(self, tree):
-        """Simulated wire round-trip (encode + decode), jax-traceable."""
-        if not self.simulates_quantization:
-            return tree
+    def _wire(self, tree):
+        """Simulated dtype round-trip (encode + decode), jax-traceable.
+        The fp32 wire is exact."""
         if self.dtype == "float16":
             return jax.tree.map(
                 lambda x: x.astype(jnp.float16).astype(x.dtype), tree)
+        if self.dtype == "int8":
+            def q_int8(x):
+                scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+                q = jnp.round(x / scale).astype(jnp.int8)
+                return (q.astype(x.dtype) * scale).astype(x.dtype)
+            return jax.tree.map(q_int8, tree)
+        return tree
 
-        def q_int8(x):
-            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
-            q = jnp.round(x / scale).astype(jnp.int8)
-            return (q.astype(x.dtype) * scale).astype(x.dtype)
-        return jax.tree.map(q_int8, tree)
+    def transmit(self, tree, ref=None, masks=None):
+        """Simulated wire round-trip. ``ref`` is the engine-provided
+        server-side reference tree for delta-style transports and
+        ``masks`` a precomputed keep-mask tree (see PartialCommChannel);
+        the base channel ignores both."""
+        del ref, masks
+        if not self.simulates_quantization:
+            return tree
+        return self._wire(tree)
 
 
-def _sample_round_block(task_dist: TaskDistribution, rng, rounds: int,
-                        clients: int, support: int, data_mode: str) -> Dict:
-    """Host-side client sampling for `rounds` x `clients`, consuming the
-    NumPy RNG in exactly the order the per-round loops did: for each
-    round, for each client, sample the task then draw its support data."""
-    xs: List[np.ndarray] = []
-    ys: List[np.ndarray] = []
-    for _ in range(rounds * clients):
-        task = task_dist.sample_task(rng)
-        if data_mode == "stream":
-            sx, sy = zip(*task.support_stream(rng, support))
-            x, y = np.stack(sx), np.stack(sy)
-        else:
-            b = task.support_batch(rng, support)
-            x, y = np.asarray(b["x"]), np.asarray(b["y"])
-        xs.append(x)
-        ys.append(y)
-    x = np.stack(xs).reshape(rounds, clients, *xs[0].shape)
-    y = np.stack(ys).reshape(rounds, clients, *ys[0].shape)
-    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+@dataclasses.dataclass(frozen=True)
+class PartialCommChannel(CommChannel):
+    """TinyMetaFed-style partial communication: each round only a fixed
+    FRACTION of the parameter vector crosses the wire.
+
+    Accounting: per leaf, ``kept_entries(n) = max(1, round(fraction*n))``
+    entries at the wire itemsize, both directions. The kept-index set is
+    derived deterministically from ``mask_seed`` (shared by both ends),
+    so no index side-channel is metered.
+
+    Simulation: on the uplink the engine passes a server-side reference
+    tree — kept entries carry the client result (after any base dtype
+    quantization), dropped entries fall back to the reference, i.e. the
+    server keeps its own value where the client sent nothing (reference =
+    phi for model-returning strategies, 0 for gradient uplinks; see
+    ``FedStrategy.uplink_ref``). On the downlink, transmitted entries
+    ride the dtype wire (fp16/int8 quantized); untransmitted entries
+    approximate the client's stale copy with the server's exact value
+    (clients are stateless in this simulation). Both directions converge
+    to the base channel as fraction -> 1. The keep mask is fixed per
+    run; rotating masks are a mask_seed sweep away.
+    """
+    fraction: float = 0.5
+    mask_seed: int = 0
+
+    needs_uplink_ref = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got "
+                             f"{self.fraction!r}")
+
+    def kept_entries(self, n: int) -> int:
+        """How many of a leaf's n entries are transmitted per round."""
+        return max(1, int(round(self.fraction * n)))
+
+    def payload_bytes(self, tree) -> int:
+        itemsize = PAYLOAD_ITEMSIZE[self.dtype]
+        return sum(self.kept_entries(x.size) * itemsize
+                   for x in jax.tree.leaves(tree))
+
+    @property
+    def simulates_quantization(self) -> bool:
+        if self.fraction < 1.0:
+            return True
+        return CommChannel.simulates_quantization.fget(self)
+
+    def mask_tree(self, tree):
+        """Deterministic boolean keep-masks, one per leaf, with exactly
+        ``kept_entries(leaf.size)`` True entries (matches the accounting)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        key = jax.random.PRNGKey(self.mask_seed)
+        masks = []
+        for i, leaf in enumerate(leaves):
+            n = leaf.size
+            perm = jax.random.permutation(jax.random.fold_in(key, i), n)
+            m = jnp.zeros((n,), jnp.bool_)
+            m = m.at[perm[:self.kept_entries(n)]].set(True)
+            masks.append(m.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, masks)
+
+    def transmit(self, tree, ref=None, masks=None):
+        # the base dtype simulation is gated on the BASE quantize decision
+        # (quantize=False keeps the accounting-only contract: values pass
+        # untouched even though fraction < 1 makes this channel simulate)
+        base_wire = CommChannel.simulates_quantization.fget(self)
+        if self.fraction >= 1.0:                 # degenerate: base channel
+            return self._wire(tree) if base_wire else tree
+        if ref is None and not base_wire:        # exact wire, nothing sent
+            return tree                          # differs from the fallback
+        if masks is None:
+            # inside a scan, pass precomputed masks instead: the keep
+            # mask is constant per run, the permutations are not free
+            masks = self.mask_tree(tree if ref is None else ref)
+        sent = self._wire(tree) if base_wire else tree
+        if ref is None:
+            # downlink: kept entries ride the wire dtype; dropped entries
+            # approximate the client's stale copy with the exact value
+            return jax.tree.map(lambda t, s, m: jnp.where(m, s, t),
+                                tree, sent, masks)
+        # uplink: masks/ref broadcast over the leading clients axis
+        return jax.tree.map(lambda r, s, m: jnp.where(m, s, r),
+                            ref, sent, masks)
+
+
+class _BlockRunner:
+    """Compiled block executor: lax.scan over the padded round axis whose
+    body vmaps client_update across clients; per-round validity mask via
+    ``lax.cond`` so padded rounds are runtime no-ops (phi passes through
+    untouched — bit-for-bit identical to an unpadded scan). phi is
+    donated — successive blocks update in place.
+
+    ``trace_count`` increments once per jit trace; with the engine's
+    fixed per-run block shape it stays at 1 per input shape config — the
+    retrace-free contract's observable.
+    """
+
+    def __init__(self, strategy, beta, channel: CommChannel):
+        self.trace_count = 0
+        beta_f = jnp.float32(beta)
+        simulate = channel.simulates_quantization
+        uplink_ref = getattr(strategy, "uplink_ref", "params")
+        needs_ref = getattr(channel, "needs_uplink_ref", False)
+
+        def make_round_fn(masks):
+            def round_fn(phi, xs):
+                valid_t, alpha_t, batch = xs      # batch leaves: (C, S, ...)
+
+                def live(phi):
+                    phi_down = (channel.transmit(phi, masks=masks)
+                                if simulate else phi)
+                    results, losses = jax.vmap(
+                        lambda b: strategy.client_update(phi_down, b,
+                                                         beta_f))(batch)
+                    if simulate:
+                        # the uplink fallback is the SERVER's own state
+                        # (phi, pre-wire), not the quantized broadcast
+                        # the clients saw
+                        ref = None
+                        if needs_ref and uplink_ref == "params":
+                            ref = phi
+                        elif needs_ref and uplink_ref == "zeros":
+                            ref = jax.tree.map(jnp.zeros_like, phi)
+                        results = channel.transmit(
+                            results, ref=ref,
+                            masks=masks if ref is not None else None)
+                    phi = strategy.server_aggregate(phi, results, alpha_t,
+                                                    beta_f)
+                    return phi, jnp.mean(losses)
+
+                def dead(phi):
+                    return phi, jnp.float32(0.0)
+
+                return jax.lax.cond(valid_t, live, dead, phi)
+            return round_fn
+
+        def run_block(phi, valid, alphas, batch):
+            self.trace_count += 1                 # runs at trace time only
+            # the partial-channel keep mask is constant for the whole run:
+            # build it here, OUTSIDE the scan body, so the per-leaf
+            # permutations execute once per block instead of every round
+            masks = (channel.mask_tree(phi)
+                     if simulate and getattr(channel, "fraction", 1.0) < 1.0
+                     else None)
+            return jax.lax.scan(make_round_fn(masks), phi,
+                                (valid, alphas, batch))
+
+        self._jit = jax.jit(run_block, donate_argnums=(0,))
+
+    def __call__(self, phi, valid, alphas, batch):
+        return self._jit(phi, valid, alphas, batch)
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_block_runner(strategy, beta, channel):
-    return _build_block_runner(strategy, beta, channel)
+def _cached_block_runner(strategy, beta, channel) -> _BlockRunner:
+    return _BlockRunner(strategy, beta, channel)
 
 
-def _block_runner(strategy, beta, channel: CommChannel):
-    """Strategies are frozen dataclasses, so identically-configured runs
-    (every test/bench re-entry) reuse one jitted runner instead of
-    recompiling per call. Unhashable custom strategies still work — they
-    just pay a fresh trace."""
+_UNHASHABLE_MISSES = {"count": 0}
+
+
+def _block_runner(strategy, beta, channel: CommChannel) -> _BlockRunner:
+    """Strategies and channels are frozen dataclasses, so identically-
+    configured runs (every test/bench re-entry) reuse one jitted runner
+    instead of recompiling per call. Unhashable custom strategies still
+    work — they pay a fresh trace per run, counted and logged so sweeps
+    notice."""
     try:
         return _cached_block_runner(strategy, float(beta), channel)
     except TypeError:
-        return _build_block_runner(strategy, beta, channel)
+        _UNHASHABLE_MISSES["count"] += 1
+        logger.warning(
+            "block-runner cache miss #%d: strategy %s (channel %s) is "
+            "unhashable; building an uncached jitted runner (fresh trace "
+            "per run). Make custom strategies frozen dataclasses to cache "
+            "them.", _UNHASHABLE_MISSES["count"],
+            type(strategy).__name__, type(channel).__name__)
+        return _BlockRunner(strategy, beta, channel)
 
 
-def _build_block_runner(strategy, beta, channel: CommChannel):
-    """jit'd (phi, alphas, batch) -> (phi, per-round inner loss): a
-    lax.scan over rounds whose body vmaps client_update across clients.
-    phi is donated — successive blocks update in place."""
-    beta_f = jnp.float32(beta)
-    simulate = channel.simulates_quantization
+def runner_cache_stats() -> Dict[str, int]:
+    """Block-runner cache counters: lru hits/misses/size plus how many
+    times an unhashable strategy forced an uncached runner."""
+    info = _cached_block_runner.cache_info()
+    return {"hits": info.hits, "misses": info.misses,
+            "currsize": info.currsize, "maxsize": info.maxsize,
+            "unhashable_misses": _UNHASHABLE_MISSES["count"]}
 
-    def round_fn(phi, xs):
-        alpha_t, batch = xs                       # batch leaves: (C, S, ...)
-        phi_down = channel.transmit(phi) if simulate else phi
-        results, losses = jax.vmap(
-            lambda b: strategy.client_update(phi_down, b, beta_f))(batch)
-        if simulate:
-            results = channel.transmit(results)
-        phi = strategy.server_aggregate(phi, results, alpha_t, beta_f)
-        return phi, jnp.mean(losses)
 
-    def run_block(phi, alphas, batch):
-        return jax.lax.scan(round_fn, phi, (alphas, batch))
-
-    return jax.jit(run_block, donate_argnums=(0,))
+def clear_runner_cache() -> None:
+    """Drop every cached jitted block runner (and reset the counters).
+    Long sweeps over many strategy/channel configs should call this
+    between phases so up to 64 stale executables don't stay pinned."""
+    _cached_block_runner.cache_clear()
+    _UNHASHABLE_MISSES["count"] = 0
 
 
 def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
@@ -212,7 +390,9 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   anneal: bool = True, seed: int = 0, eval_every: int = 0,
                   eval_kwargs: Optional[dict] = None,
                   channel: Optional[CommChannel] = None,
-                  max_block: int = 512) -> Dict:
+                  max_block: int = 512, prefetch: int = 2,
+                  sampler: str = "reference",
+                  sampling: Optional[SamplingPolicy] = None) -> Dict:
     """Run `rounds` federated rounds of `strategy`.
 
     Returns {"params", "history"} (+ "comm_bytes" for strategies that
@@ -220,12 +400,21 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     loops' format: evaluate_init fields + round [+ comm_bytes,
     inner_loss].
 
-    Rounds between evals execute as one on-device scan (split into
-    `max_block`-round jit blocks to bound host buffering); the host only
-    samples client data and runs the eval protocol.
+    Rounds between evals execute as fixed-shape on-device scan blocks
+    (padded to one per-run length, masked, `max_block`-bounded — see
+    repro.core.pipeline.plan_blocks), so the block runner compiles once
+    per config. The host only samples client data (`sampling` policy;
+    `sampler` picks the legacy-exact "reference" RNG order or the
+    "vectorized" fast path) and runs the eval protocol. With
+    `prefetch` > 0 a background thread samples and stages block N+1
+    while the device runs block N (double-buffered at the default 2);
+    `prefetch=0` is the synchronous escape hatch — both schedules are
+    bit-for-bit identical.
     """
     if channel is None:
         channel = CommChannel()
+    if sampling is None:
+        sampling = UniformSampling(sampler)
     rng = np.random.default_rng(seed)
     # private copy: the block runner donates its phi argument, and the
     # caller's init_params must stay usable (they are reused across runs)
@@ -235,31 +424,48 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     per_round_bytes = (channel.round_bytes(init_params, clients_per_round)
                        if strategy.meters_comm else 0)
     run_block = _block_runner(strategy, beta, channel)
+    blocks, pad = plan_blocks(rounds, eval_every, max_block)
+    device = single_device_of(phi)       # staging target for the prefetcher
 
-    stride = eval_every if eval_every else rounds
-    rnd = 0
-    while rnd < rounds:
-        eval_boundary = min(rounds, (rnd // stride + 1) * stride)
-        end = min(eval_boundary, rnd + max_block)
-        block = end - rnd
-        alphas = jnp.asarray(
-            [alpha * (1 - r / rounds) if anneal else alpha
-             for r in range(rnd, end)], jnp.float32)
-        batch = _sample_round_block(task_dist, rng, block, clients_per_round,
-                                    support, strategy.data_mode)
-        phi, round_losses = run_block(phi, alphas, batch)
-        comm_bytes += block * per_round_bytes
-        rnd = end
-        if eval_every and rnd % eval_every == 0:
-            ev = evaluate_init(strategy.loss_fn, phi, task_dist,
-                               np.random.default_rng(10_000 + rnd - 1),
-                               **(eval_kwargs or {}))
-            ev["round"] = rnd
-            if strategy.meters_comm:
-                ev["comm_bytes"] = comm_bytes
-            if strategy.tracks_inner_loss:
-                ev["inner_loss"] = float(round_losses[-1])
-            history.append(ev)
+    def stage(i):
+        """Sample, pad, and device-stage block i. Called strictly in
+        block order (inline, or from the single prefetch thread), so the
+        host RNG stream is schedule-independent."""
+        start, end = blocks[i]
+        blk = end - start
+        batch = sampling.sample_block(task_dist, rng, blk, clients_per_round,
+                                      support, strategy.data_mode)
+        r = np.arange(start, end)
+        alphas = np.zeros(pad, np.float32)
+        alphas[:blk] = alpha * (1 - r / rounds) if anneal else alpha
+        valid = np.zeros(pad, bool)
+        valid[:blk] = True
+        if blk < pad:
+            batch = {k: np.concatenate(
+                [np.asarray(v),
+                 np.zeros((pad - blk,) + np.asarray(v).shape[1:],
+                          np.asarray(v).dtype)]) for k, v in batch.items()}
+        return jax.device_put((valid, alphas, batch), device)
+
+    staged_iter = prefetch_items(stage, len(blocks), depth=prefetch)
+    try:
+        for (start, end), staged in zip(blocks, staged_iter):
+            valid_d, alphas_d, batch_d = staged
+            phi, round_losses = run_block(phi, valid_d, alphas_d, batch_d)
+            blk = end - start
+            comm_bytes += blk * per_round_bytes
+            if eval_every and end % eval_every == 0:
+                ev = evaluate_init(strategy.loss_fn, phi, task_dist,
+                                   np.random.default_rng(10_000 + end - 1),
+                                   **(eval_kwargs or {}))
+                ev["round"] = end
+                if strategy.meters_comm:
+                    ev["comm_bytes"] = comm_bytes
+                if strategy.tracks_inner_loss:
+                    ev["inner_loss"] = float(round_losses[blk - 1])
+                history.append(ev)
+    finally:
+        staged_iter.close()
 
     out = {"params": phi, "history": history}
     if strategy.meters_comm:

@@ -21,13 +21,16 @@ def fedavg_train(loss_fn: Callable, init_params,
                  epochs: int = 8, clients_per_round: int = 8, seed: int = 0,
                  eval_every: int = 0,
                  eval_kwargs: Optional[dict] = None,
-                 channel: Optional[CommChannel] = None) -> Dict:
+                 channel: Optional[CommChannel] = None,
+                 prefetch: int = 2, sampler: str = "reference",
+                 max_block: int = 512) -> Dict:
     """FedAVG: clients run E local epochs; server averages the MODELS."""
     return run_federated(
         init_params, task_dist, FedAvgStrategy(loss_fn, epochs=epochs),
         rounds=rounds, clients_per_round=clients_per_round, alpha=1.0,
         beta=beta, support=support, anneal=False, seed=seed,
-        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel)
+        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
+        prefetch=prefetch, sampler=sampler, max_block=max_block)
 
 
 def fedsgd_train(loss_fn: Callable, init_params,
@@ -36,10 +39,13 @@ def fedsgd_train(loss_fn: Callable, init_params,
                  clients_per_round: int = 8, seed: int = 0,
                  eval_every: int = 0,
                  eval_kwargs: Optional[dict] = None,
-                 channel: Optional[CommChannel] = None) -> Dict:
+                 channel: Optional[CommChannel] = None,
+                 prefetch: int = 2, sampler: str = "reference",
+                 max_block: int = 512) -> Dict:
     """FedSGD: each client sends ONE gradient; server applies the mean."""
     return run_federated(
         init_params, task_dist, FedSGDStrategy(loss_fn),
         rounds=rounds, clients_per_round=clients_per_round, alpha=1.0,
         beta=beta, support=support, anneal=False, seed=seed,
-        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel)
+        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
+        prefetch=prefetch, sampler=sampler, max_block=max_block)

@@ -1,0 +1,201 @@
+"""Host/device round pipeline: block planning, background prefetch, and
+pluggable client-sampling policies for the federated round engine.
+
+PR 1 moved the round math on-device (vmap x lax.scan); this module closes
+the remaining host/device gap:
+
+- ``plan_blocks``: split a run into scan blocks at eval boundaries and
+  ``max_block``, and pick ONE fixed padded length for every block in the
+  run — the retrace-free shape contract (the block runner compiles once
+  per strategy/channel config; uneven eval/tail blocks are padded and
+  masked instead of re-traced).
+- ``BlockPrefetcher``: a background producer thread (the levanter
+  background-data-loading pattern) that samples and stages block N+1
+  while the device runs block N. Double-buffered at depth=2; the
+  producer runs strictly in block order, so a seeded host RNG consumed
+  inside ``produce`` sees exactly the synchronous draw order — pipelined
+  and synchronous runs are bit-for-bit identical.
+- ``SamplingPolicy`` / ``UniformSampling``: which client tasks feed each
+  round is a policy object. Uniform i.i.d. sampling (the paper's schema)
+  is the default; partial-participation / straggler policies plug in here
+  without touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Dict, Iterator, List, Tuple
+
+import jax
+
+SAMPLERS = ("reference", "vectorized")
+
+
+def plan_blocks(rounds: int, eval_every: int,
+                max_block: int) -> Tuple[List[Tuple[int, int]], int]:
+    """Split ``rounds`` into scan blocks; return ``(blocks, pad)``.
+
+    ``blocks`` is a list of ``(start, end)`` half-open round ranges that
+    cover ``[0, rounds)``, cut at every eval boundary (multiples of
+    ``eval_every``) and at most ``max_block`` rounds long. ``pad`` is the
+    single fixed length every block is padded to on the host —
+    ``min(max_block, stride, rounds)`` where ``stride`` is the eval
+    cadence — so one run uses exactly one block shape regardless of
+    ``rounds % eval_every`` or the tail.
+    """
+    if max_block <= 0:
+        raise ValueError(f"max_block must be positive, got {max_block!r}")
+    if rounds <= 0:
+        return [], 0
+    stride = eval_every if eval_every else rounds
+    blocks: List[Tuple[int, int]] = []
+    rnd = 0
+    while rnd < rounds:
+        eval_boundary = min(rounds, (rnd // stride + 1) * stride)
+        end = min(eval_boundary, rnd + max_block)
+        blocks.append((rnd, end))
+        rnd = end
+    pad = min(max_block, stride, rounds)
+    assert all(end - start <= pad for start, end in blocks)
+    return blocks, pad
+
+
+class BlockPrefetcher:
+    """Run ``produce(i)`` for ``i in range(n)`` on a daemon thread, keeping
+    at most ``depth`` staged results ahead of the consumer.
+
+    ``produce`` typically samples a block on the host and ``device_put``s
+    it, so H2D staging of block N+1 hides behind device compute on block N
+    (``depth=2`` = classic double buffering). Items are produced strictly
+    in order. Producer exceptions are re-raised from :meth:`get`, which
+    raises ``StopIteration`` once all ``n`` items were consumed (no
+    deadlock on over-consumption); call :meth:`close` (idempotent) to
+    stop early without deadlocking the bounded queue.
+    """
+
+    _DONE = object()
+
+    def __init__(self, produce: Callable[[int], object], n: int,
+                 depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._done = False
+        self._thread = threading.Thread(target=self._run, args=(produce, n),
+                                        name="block-prefetch", daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> None:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    def _run(self, produce, n) -> None:
+        try:
+            for i in range(n):
+                if self._stop.is_set():
+                    return
+                self._put((None, produce(i)))
+            self._put((None, self._DONE))
+        except BaseException as exc:  # propagated to the consumer
+            self._put((exc, None))
+
+    def get(self):
+        """Next staged item, blocking; re-raises producer exceptions and
+        raises StopIteration once the stream is exhausted or closed."""
+        if self._done:
+            raise StopIteration("prefetcher exhausted")
+        exc, item = self._q.get()
+        if exc is not None:
+            self._done = True
+            self._stop.set()
+            raise exc
+        if item is self._DONE:
+            self._done = True
+            raise StopIteration("prefetcher exhausted")
+        return item
+
+    def close(self) -> None:
+        """Stop the producer and drain the queue (safe to call twice)."""
+        self._done = True
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+
+def single_device_of(tree):
+    """The one device every jax leaf of ``tree`` lives on, or None (plain
+    NumPy leaves, sharded/multi-device trees, empty trees). Prefetch
+    producers must pin ``device_put`` to this explicitly —
+    ``jax.default_device`` is thread-local and does not reach the
+    background thread."""
+    devices = {d for leaf in jax.tree.leaves(tree)
+               if hasattr(leaf, "devices") for d in leaf.devices()}
+    return devices.pop() if len(devices) == 1 else None
+
+
+def prefetch_items(produce: Callable[[int], object], n: int,
+                   depth: int = 2) -> Iterator[object]:
+    """Yield ``produce(i)`` for ``i in range(n)``, staged up to ``depth``
+    ahead by a :class:`BlockPrefetcher` thread. ``depth=0`` (or a single
+    item) falls back to inline calls — same order, same numerics. The
+    producer is shut down when the generator is exhausted or closed
+    (``.close()`` / garbage collection), so early consumer exits don't
+    leak the thread.
+    """
+    if depth <= 0 or n <= 1:
+        for i in range(n):
+            yield produce(i)
+        return
+    pf = BlockPrefetcher(produce, n, depth=depth)
+    try:
+        for _ in range(n):
+            yield pf.get()
+    finally:
+        pf.close()
+
+
+class SamplingPolicy:
+    """Decides which client tasks feed each round of a block.
+
+    ``sample_block`` must consume ``rng`` deterministically (the prefetch
+    pipeline replays it in block order) and return NumPy arrays shaped
+    ``{"x": (rounds, clients, support, ...), "y": ...}``.
+    """
+
+    def sample_block(self, task_dist, rng, rounds: int, clients: int,
+                     support: int, data_mode: str) -> Dict:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampling(SamplingPolicy):
+    """Every round draws ``clients`` fresh tasks i.i.d. — the paper's
+    serial (C=1) and batched schema.
+
+    sampler="reference" replays the legacy per-task RNG order bit-for-bit
+    (seeded parity with the pre-engine loops); "vectorized" uses the
+    distribution's batched ``sample_support_block`` (block RNG order, one
+    allocation — the fast host path).
+    """
+    sampler: str = "reference"
+
+    def __post_init__(self):
+        if self.sampler not in SAMPLERS:
+            raise ValueError(f"unknown sampler {self.sampler!r}; "
+                             f"expected one of {SAMPLERS}")
+
+    def sample_block(self, task_dist, rng, rounds, clients, support,
+                     data_mode):
+        if self.sampler == "vectorized":
+            return task_dist.sample_support_block(rng, rounds, clients,
+                                                  support, data_mode)
+        return task_dist.sample_support_block_reference(
+            rng, rounds, clients, support, data_mode)

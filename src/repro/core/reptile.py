@@ -24,7 +24,9 @@ def reptile_train(loss_fn: Callable, init_params,
                   clients_per_round: int = 1, anneal: bool = True,
                   seed: int = 0, eval_every: int = 0,
                   eval_kwargs: Optional[dict] = None,
-                  channel: Optional[CommChannel] = None) -> Dict:
+                  channel: Optional[CommChannel] = None,
+                  prefetch: int = 2, sampler: str = "reference",
+                  max_block: int = 512) -> Dict:
     """clients_per_round == 1 -> serial Reptile; > 1 -> batched Reptile
     (server averages the per-client pseudo-gradients; requires concurrent
     connections to all sampled clients — the cost the paper calls out)."""
@@ -32,4 +34,5 @@ def reptile_train(loss_fn: Callable, init_params,
         init_params, task_dist, ReptileStrategy(loss_fn, epochs=epochs),
         rounds=rounds, clients_per_round=clients_per_round, alpha=alpha,
         beta=beta, support=support, anneal=anneal, seed=seed,
-        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel)
+        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
+        prefetch=prefetch, sampler=sampler, max_block=max_block)

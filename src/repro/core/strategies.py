@@ -46,6 +46,12 @@ class FedStrategy:
     data_mode = "batch"          # "batch" | "stream" client data layout
     meters_comm = True           # account CommChannel bytes + report them
     tracks_inner_loss = False    # report last-round client loss at evals
+    uplink_ref = "params"        # what a partial uplink falls back to for
+    #                              untransmitted entries: "params" (the
+    #                              broadcast phi — model-returning
+    #                              uplinks), "zeros" (gradient uplinks),
+    #                              or "none" (no reference; transmit the
+    #                              result tree as-is)
 
     def client_update(self, phi, client_batch, beta):
         raise NotImplementedError
@@ -113,6 +119,8 @@ class FedSGDStrategy(FedStrategy):
     """FedSGD: every client ships ONE gradient; the server applies the
     mean with the client rate beta."""
 
+    uplink_ref = "zeros"         # untransmitted gradient entries are 0
+
     def client_update(self, phi, client_batch, beta):
         loss, g = jax.value_and_grad(self.loss_fn)(phi, client_batch)
         return g, loss
@@ -130,6 +138,7 @@ class TransferStrategy(FedStrategy):
     federation, so no comm accounting."""
 
     meters_comm = False
+    uplink_ref = "none"          # raw-data uplink: no phi-shaped reference
 
     def client_update(self, phi, client_batch, beta):
         return client_batch, jnp.zeros(())

@@ -32,12 +32,16 @@ def tinyreptile_train(loss_fn: Callable, init_params,
                       anneal: bool = True, seed: int = 0,
                       eval_every: int = 0, eval_kwargs: Optional[dict] = None,
                       use_pallas: Optional[bool] = None,
-                      channel: Optional[CommChannel] = None) -> Dict:
+                      channel: Optional[CommChannel] = None,
+                      prefetch: int = 2, sampler: str = "reference",
+                      max_block: int = 512) -> Dict:
     """Returns {"params", "history", "comm_bytes"}; history rows are
-    per-eval dicts."""
+    per-eval dicts. `prefetch`/`sampler`/`max_block` tune the engine's
+    host/device pipeline (see repro.core.engine.run_federated)."""
     return run_federated(
         init_params, task_dist,
         TinyReptileStrategy(loss_fn, use_pallas=use_pallas),
         rounds=rounds, clients_per_round=1, alpha=alpha, beta=beta,
         support=support, anneal=anneal, seed=seed, eval_every=eval_every,
-        eval_kwargs=eval_kwargs, channel=channel)
+        eval_kwargs=eval_kwargs, channel=channel, prefetch=prefetch,
+        sampler=sampler, max_block=max_block)

@@ -19,10 +19,13 @@ def transfer_train(loss_fn: Callable, init_params,
                    rounds: int = 1000, beta: float = 0.01,
                    batch_per_round: int = 32, tasks_per_round: int = 8,
                    seed: int = 0, eval_every: int = 0,
-                   eval_kwargs: Optional[dict] = None) -> Dict:
+                   eval_kwargs: Optional[dict] = None,
+                   prefetch: int = 2, sampler: str = "reference",
+                   max_block: int = 512) -> Dict:
     per_task = max(batch_per_round // tasks_per_round, 1)
     return run_federated(
         init_params, task_dist, TransferStrategy(loss_fn),
         rounds=rounds, clients_per_round=tasks_per_round, alpha=0.0,
         beta=beta, support=per_task, anneal=False, seed=seed,
-        eval_every=eval_every, eval_kwargs=eval_kwargs)
+        eval_every=eval_every, eval_kwargs=eval_kwargs, prefetch=prefetch,
+        sampler=sampler, max_block=max_block)

@@ -12,6 +12,22 @@ The paper's three benchmarks:
 
 Every client exposes BOTH a batch view (Reptile/FedAVG) and a one-sample-
 at-a-time stream view (TinyReptile's online learning).
+
+Block sampling (the round engine's host path) comes in two flavours:
+
+- ``sample_support_block_reference``: a per-task Python loop consuming
+  the RNG in exactly the order the legacy per-round loops did (task
+  parameters interleaved with that task's support draws). This is the
+  seeded-parity anchor — the engine's default, and what every
+  vectorized override is validated against in spirit.
+- ``sample_support_block``: batched vectorized sampling — one NumPy
+  allocation for the whole ``rounds x clients`` block, no per-sample
+  ``np.stack``. Overrides consume the RNG in a documented BLOCK order
+  (all task-level draws first, then each per-sample quantity as one
+  array draw), so a given seed yields different — but identically
+  distributed — tasks than the reference order. Within one sampler the
+  stream is deterministic, which is what the engine's prefetch pipeline
+  relies on for bit-for-bit pipelined-vs-synchronous parity.
 """
 from __future__ import annotations
 
@@ -45,6 +61,44 @@ class TaskDistribution:
     def sample_task(self, rng: np.random.Generator) -> ClientTask:
         raise NotImplementedError
 
+    def sample_support_block_reference(self, rng: np.random.Generator,
+                                       rounds: int, clients: int,
+                                       support: int,
+                                       data_mode: str = "batch") -> Dict:
+        """Seeded-parity reference: sample ``rounds x clients`` client
+        support sets with a per-task Python loop, consuming `rng` in
+        exactly the order the legacy per-round loops did (for each round,
+        for each client: the task, then its support data).
+
+        Returns {"x": (rounds, clients, support, ...), "y": ...} NumPy
+        arrays. Stream- and batch-mode clients draw identically here;
+        the mode only matters for distributions whose two views differ.
+        """
+        xs, ys = [], []
+        for _ in range(rounds * clients):
+            task = self.sample_task(rng)
+            if data_mode == "stream":
+                sx, sy = zip(*task.support_stream(rng, support))
+                x, y = np.stack(sx), np.stack(sy)
+            else:
+                b = task.support_batch(rng, support)
+                x, y = np.asarray(b["x"]), np.asarray(b["y"])
+            xs.append(x)
+            ys.append(y)
+        x = np.stack(xs).reshape(rounds, clients, *xs[0].shape)
+        y = np.stack(ys).reshape(rounds, clients, *ys[0].shape)
+        return {"x": x, "y": y}
+
+    def sample_support_block(self, rng: np.random.Generator, rounds: int,
+                             clients: int, support: int,
+                             data_mode: str = "batch") -> Dict:
+        """Batched block sampling: one vectorized allocation for the whole
+        block. Subclasses override with true vectorized implementations
+        (block RNG order, see module docstring); the base class falls back
+        to the reference loop so every distribution supports the API."""
+        return self.sample_support_block_reference(rng, rounds, clients,
+                                                   support, data_mode)
+
 
 class SineTasks(TaskDistribution):
     """f(x) = a sin(b x + c); a ~ U[0.1, 5], b ~ U[0.8, 1.2], c ~ U[0, pi]."""
@@ -65,6 +119,24 @@ class SineTasks(TaskDistribution):
 
         return ClientTask(make_sample=make_sample,
                           task_id=int(rng.integers(1 << 31)))
+
+    def sample_support_block(self, rng, rounds, clients, support,
+                             data_mode="batch"):
+        """Vectorized block: (1) all task parameter triples (a, b, c) as
+        one (n, 3) uniform draw (row-major — the same values a scalar
+        per-task a/b/c loop would draw), then (2) all support inputs as
+        one (n, support, 1) draw. Per-sample math is identical to
+        ``make_sample``, so a scalar loop over this block order
+        reproduces it bit-for-bit (tested)."""
+        del data_mode  # the stream and batch views share one layout
+        n = rounds * clients
+        abc = rng.uniform([0.1, 0.8, 0.0], [5.0, 1.2, np.pi], size=(n, 3))
+        a, b, c = (abc[:, j, None, None] for j in range(3))
+        lo, hi = self.x_range
+        x = rng.uniform(lo, hi, size=(n, support, 1)).astype(np.float32)
+        y = (a * np.sin(b * x + c)).astype(np.float32)
+        return {"x": x.reshape(rounds, clients, support, 1),
+                "y": y.reshape(rounds, clients, support, 1)}
 
 
 def _glyph_prototype(class_id: int, side: int = 28) -> np.ndarray:
@@ -118,6 +190,34 @@ class OmniglotTasks(TaskDistribution):
         return ClientTask(make_sample=make_sample,
                           task_id=int(rng.integers(1 << 31)))
 
+    def sample_support_block(self, rng, rounds, clients, support,
+                             data_mode="batch"):
+        """Vectorized block. RNG order: per-task class subsets first (the
+        only remaining per-task loop — ``choice`` without replacement),
+        then labels, roll offsets, and noise each as one array draw. The
+        per-sample roll is a wrapped gather instead of ``np.roll``."""
+        del data_mode
+        n, side = rounds * clients, 28
+        classes = np.stack([rng.choice(self.num_classes, size=self.ways,
+                                       replace=False) for _ in range(n)])
+        labels = rng.integers(self.ways, size=(n, support))
+        shifts = rng.integers(-2, 3, size=(n, support, 2))
+        noise = rng.normal(0, self.noise,
+                           size=(n, support, side, side)).astype(np.float32)
+        class_ids = np.take_along_axis(classes, labels, axis=1)
+        uniq, inv = np.unique(class_ids, return_inverse=True)
+        protos = np.stack([self._proto(int(c)) for c in uniq])
+        imgs = protos[inv.reshape(n, support)]            # (n, S, side, side)
+        r_idx = (np.arange(side)[None, None, :, None]
+                 - shifts[:, :, 0, None, None]) % side    # (n, S, side, 1)
+        c_idx = (np.arange(side)[None, None, None, :]
+                 - shifts[:, :, 1, None, None]) % side    # (n, S, 1, side)
+        rolled = imgs[np.arange(n)[:, None, None, None],
+                      np.arange(support)[None, :, None, None], r_idx, c_idx]
+        x = (rolled + noise)[..., None].astype(np.float32)
+        return {"x": x.reshape(rounds, clients, support, side, side, 1),
+                "y": labels.astype(np.int32).reshape(rounds, clients, support)}
+
 
 def _kws_prototype(class_id: int, t: int = 49, f: int = 10) -> np.ndarray:
     """Synthetic MFCC-like map: smooth temporal envelope x spectral shape."""
@@ -165,3 +265,29 @@ class KWSTasks(TaskDistribution):
 
         return ClientTask(make_sample=make_sample,
                           task_id=int(rng.integers(1 << 31)))
+
+    def sample_support_block(self, rng, rounds, clients, support,
+                             data_mode="batch"):
+        """Vectorized block. RNG order: per-task keyword subsets first,
+        then labels, time shifts, amplitudes, and noise each as one array
+        draw; the time roll is a wrapped gather along the frame axis."""
+        del data_mode
+        n, t, f = rounds * clients, 49, 10
+        words = np.stack([rng.choice(self.num_words, size=self.ways,
+                                     replace=False) for _ in range(n)])
+        labels = rng.integers(self.ways, size=(n, support))
+        shifts = rng.integers(-3, 4, size=(n, support))
+        amps = rng.uniform(0.8, 1.2, size=(n, support))
+        noise = rng.normal(0, self.noise,
+                           size=(n, support, t, f)).astype(np.float32)
+        word_ids = np.take_along_axis(words, labels, axis=1)
+        uniq, inv = np.unique(word_ids, return_inverse=True)
+        protos = np.stack([self._proto(int(w)) for w in uniq])
+        maps = protos[inv.reshape(n, support)]             # (n, S, t, f)
+        r_idx = (np.arange(t)[None, None, :] - shifts[..., None]) % t
+        rolled = maps[np.arange(n)[:, None, None],
+                      np.arange(support)[None, :, None], r_idx]
+        x = (rolled * amps[..., None, None] + noise)
+        x = x[..., None].astype(np.float32)
+        return {"x": x.reshape(rounds, clients, support, t, f, 1),
+                "y": labels.astype(np.int32).reshape(rounds, clients, support)}

@@ -21,10 +21,12 @@ import numpy as np
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import ALL_ARCHS, get_arch
+from repro.core.pipeline import single_device_of
 from repro.data import LMClientStream
 from repro.models import build_model
 from repro.optim.schedules import linear_anneal
-from repro.runtime.steps import make_meta_train_step, microbatch
+from repro.runtime.steps import (make_meta_train_step, microbatch,
+                                 prefetch_batches)
 
 
 def main():
@@ -65,11 +67,16 @@ def main():
     step = jax.jit(make_meta_train_step(model, beta=args.beta,
                                         alpha=args.alpha),
                    donate_argnums=(0,))
-    for rnd in range(start_round, args.rounds):
-        # TinyReptile serial schema: ONE client per round
+    device = single_device_of(phi)      # staging target for the prefetcher
+
+    def make_round_batch(i):
+        # TinyReptile serial schema: ONE client per round. Runs on the
+        # prefetch thread, strictly in round order, so the seeded rng
+        # draws exactly the synchronous sequence while batch building +
+        # device staging for round N+1 hide behind the step on round N.
+        rnd = start_round + i
         client = clients[int(rng.integers(len(clients)))]
         raw = client.batch(rng, args.batch, args.seq)
-        text_len = args.seq
         batch = {}
         if cfg.frontend == "vision":
             batch["patch_embeds"] = np.asarray(
@@ -81,12 +88,15 @@ def main():
                                  cfg.d_model)), np.float32)
         batch["tokens"] = raw["tokens"]
         batch["labels"] = raw["labels"]
-        batch = microbatch(jax.tree.map(jnp.asarray, batch), args.k_inner)
-        alpha_t = float(alpha_sched(rnd))
+        batch = jax.device_put(microbatch(batch, args.k_inner), device)
+        return rnd, client.zipf_a, float(alpha_sched(rnd)), batch
+
+    staged = prefetch_batches(make_round_batch, args.rounds - start_round)
+    for rnd, zipf_a, alpha_t, batch in staged:
         t0 = time.time()
         phi, metrics = step(phi, batch, jnp.float32(alpha_t))
         print(json.dumps({
-            "round": rnd, "client": client.zipf_a,
+            "round": rnd, "client": zipf_a,
             "loss": float(metrics["loss"]),
             "inner_first": float(metrics["inner_first"]),
             "inner_last": float(metrics["inner_last"]),

@@ -15,12 +15,13 @@ round body is built from the federated engine's building blocks
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Iterator
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import meta_interpolate, streaming_sgd
+from repro.core.pipeline import prefetch_items
 from repro.runtime.shardctx import shard
 
 
@@ -74,3 +75,20 @@ def microbatch(batch: Dict[str, Any], k: int) -> Dict[str, Any]:
         b = x.shape[0]
         return x.reshape(k, b // k, *x.shape[1:])
     return jax.tree.map(r, batch)
+
+
+def prefetch_batches(make_batch: Callable[[int], Any], num_batches: int,
+                     depth: int = 2) -> Iterator[Any]:
+    """Yield ``make_batch(i)`` for ``i in range(num_batches)``, staged by a
+    background thread so host batch building + H2D copy for step N+1 hide
+    behind device compute on step N (the engine's round pipeline, reused
+    for launcher-scale training loops).
+
+    ``make_batch`` is called strictly in index order on ONE thread, so a
+    seeded host RNG consumed inside it draws exactly the synchronous
+    sequence — ``depth=0`` falls back to inline calls with identical
+    numerics. Beware that ``jax.default_device`` is thread-local: pin
+    device placement explicitly inside ``make_batch`` (e.g.
+    ``jax.device_put(..., device)``) if it matters.
+    """
+    return prefetch_items(make_batch, num_batches, depth=depth)

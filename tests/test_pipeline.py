@@ -1,0 +1,391 @@
+"""The overlapped host/device round pipeline (PR 2).
+
+Covers the four tentpole contracts:
+- block planning + fixed padded shapes (retrace-free: ONE jit trace per
+  strategy/channel config across uneven eval/tail blocks);
+- bit-for-bit seeded parity of pipelined (background prefetch) vs
+  synchronous runs across eval cadences and uneven max_block tails;
+- vectorized block sampling == the scalar block-order reference loop for
+  the sine distribution, and shape/dtype contracts for all distributions;
+- TinyMetaFed-style partial-communication channel (fraction accounting +
+  masked uplink) and the block-runner cache counters.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import SINE_MLP
+from repro.core import (CommChannel, PartialCommChannel, UniformSampling,
+                        clear_runner_cache, fedsgd_train, reptile_train,
+                        runner_cache_stats, tinyreptile_train)
+from repro.core.engine import _block_runner
+from repro.core.meta import tree_bytes
+from repro.core.pipeline import BlockPrefetcher, plan_blocks
+from repro.core.strategies import TinyReptileStrategy
+from repro.data import SineTasks
+from repro.data.tasks import KWSTasks, OmniglotTasks
+from repro.models.paper_nets import init_paper_model, paper_model_loss
+
+LOSS = functools.partial(paper_model_loss, SINE_MLP)
+EVAL = dict(num_tasks=2, support=4, k_steps=2, lr=0.02, query=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return init_paper_model(SINE_MLP, jax.random.PRNGKey(0)), SineTasks()
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# block planning
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rounds,eval_every,max_block", [
+    (120, 0, 512), (120, 20, 512), (50, 20, 512), (21, 7, 512),
+    (21, 0, 8), (17, 7, 5), (1, 0, 512), (20, 30, 512),
+])
+def test_plan_blocks_covers_run_with_one_pad(rounds, eval_every, max_block):
+    blocks, pad = plan_blocks(rounds, eval_every, max_block)
+    # contiguous cover of [0, rounds)
+    assert blocks[0][0] == 0 and blocks[-1][1] == rounds
+    for (_, e0), (s1, _) in zip(blocks, blocks[1:]):
+        assert e0 == s1
+    # every block fits the single padded shape
+    assert all(0 < e - s <= pad for s, e in blocks)
+    # blocks never straddle an eval boundary
+    if eval_every:
+        for s, e in blocks:
+            assert s // eval_every == (e - 1) // eval_every
+    assert pad <= max_block and pad <= rounds
+
+
+def test_plan_blocks_empty_run():
+    assert plan_blocks(0, 0, 512) == ([], 0)
+
+
+def test_plan_blocks_rejects_nonpositive_max_block():
+    for bad in (0, -3):
+        with pytest.raises(ValueError):
+            plan_blocks(10, 0, bad)
+
+
+# ---------------------------------------------------------------------------
+# pipelined vs synchronous: bit-for-bit seeded parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eval_every", [0, 7, 21])
+@pytest.mark.parametrize("sampler", ["reference", "vectorized"])
+def test_prefetch_parity_across_eval_cadence(setup, eval_every, sampler):
+    params, dist = setup
+    kw = dict(rounds=21, alpha=1.0, beta=0.02, support=4, seed=3,
+              eval_every=eval_every, eval_kwargs=EVAL, sampler=sampler)
+    sync = tinyreptile_train(LOSS, params, dist, prefetch=0, **kw)
+    piped = tinyreptile_train(LOSS, params, dist, prefetch=2, **kw)
+    _assert_trees_equal(sync["params"], piped["params"])
+    assert sync["history"] == piped["history"]
+    assert sync["comm_bytes"] == piped["comm_bytes"]
+
+
+def test_prefetch_parity_uneven_max_block_tail(setup):
+    """rounds % max_block != 0: the short tail block is padded + masked,
+    not re-traced — and numerics stay bitwise identical."""
+    params, dist = setup
+    kw = dict(rounds=21, alpha=1.0, beta=0.02, support=4, seed=5,
+              max_block=8, clients_per_round=3, epochs=2)
+    sync = reptile_train(LOSS, params, dist, prefetch=0, **kw)
+    piped = reptile_train(LOSS, params, dist, prefetch=2, **kw)
+    _assert_trees_equal(sync["params"], piped["params"])
+
+
+def test_sampling_policy_object_param(setup):
+    """An explicit SamplingPolicy instance overrides the sampler string."""
+    params, dist = setup
+    from repro.core import run_federated
+    from repro.core.strategies import TinyReptileStrategy as S
+    kw = dict(rounds=9, alpha=1.0, beta=0.02, support=4, seed=2)
+    a = run_federated(params, dist, S(LOSS), sampler="vectorized", **kw)
+    b = run_federated(params, dist, S(LOSS),
+                      sampling=UniformSampling("vectorized"), **kw)
+    _assert_trees_equal(a["params"], b["params"])
+    with pytest.raises(ValueError):
+        UniformSampling("bogus")
+
+
+# ---------------------------------------------------------------------------
+# retrace-free fixed shapes: exactly one compile per config
+# ---------------------------------------------------------------------------
+
+def test_single_trace_across_uneven_eval_blocks(setup):
+    """17 rounds at eval_every=7 -> blocks 7, 7, 3 all padded to 7: the
+    runner traces exactly once (the tentpole's acceptance criterion)."""
+    params, dist = setup
+    clear_runner_cache()
+    beta = 0.0701                        # unique config -> fresh runner
+    tinyreptile_train(LOSS, params, dist, rounds=17, alpha=1.0, beta=beta,
+                      support=4, seed=3, eval_every=7, eval_kwargs=EVAL)
+    runner = _block_runner(TinyReptileStrategy(LOSS, use_pallas=None),
+                           beta, CommChannel())
+    assert runner.trace_count == 1
+    # a second identical run reuses the cached executable: still 1 trace
+    tinyreptile_train(LOSS, params, dist, rounds=17, alpha=1.0, beta=beta,
+                      support=4, seed=4, eval_every=7, eval_kwargs=EVAL)
+    assert runner.trace_count == 1
+
+
+def test_single_trace_uneven_max_block_tail(setup):
+    params, dist = setup
+    clear_runner_cache()
+    beta = 0.0702
+    tinyreptile_train(LOSS, params, dist, rounds=21, alpha=1.0, beta=beta,
+                      support=4, seed=3, max_block=8)   # blocks 8, 8, 5
+    runner = _block_runner(TinyReptileStrategy(LOSS, use_pallas=None),
+                           beta, CommChannel())
+    assert runner.trace_count == 1
+
+
+# ---------------------------------------------------------------------------
+# vectorized block sampling
+# ---------------------------------------------------------------------------
+
+def test_sine_vectorized_block_matches_scalar_block_order_loop():
+    """The vectorized sine sampler is bit-for-bit a scalar loop in the
+    documented block RNG order: all (a, b, c) task triples row-by-row,
+    then every support input, then the same per-sample math."""
+    dist = SineTasks()
+    rounds, clients, support = 4, 3, 5
+    vec = dist.sample_support_block(np.random.default_rng(9), rounds,
+                                    clients, support)
+    rng = np.random.default_rng(9)
+    n, (lo, hi) = rounds * clients, dist.x_range
+    abc = np.array([[rng.uniform(0.1, 5.0), rng.uniform(0.8, 1.2),
+                     rng.uniform(0.0, np.pi)] for _ in range(n)])
+    x = np.array([[rng.uniform(lo, hi) for _ in range(support)]
+                  for _ in range(n)], np.float32)[..., None]
+    a, b, c = (abc[:, j, None, None] for j in range(3))
+    y = (a * np.sin(b * x + c)).astype(np.float32)
+    np.testing.assert_array_equal(vec["x"],
+                                  x.reshape(rounds, clients, support, 1))
+    np.testing.assert_array_equal(vec["y"],
+                                  y.reshape(rounds, clients, support, 1))
+
+
+@pytest.mark.parametrize("dist,ways", [
+    (OmniglotTasks(num_classes=30, ways=5), 5),
+    (KWSTasks(num_words=12, ways=4), 4),
+])
+def test_vectorized_block_matches_reference_contract(dist, ways):
+    """Vectorized Omniglot/KWS blocks match the reference loop's shapes,
+    dtypes, and label/value ranges (the RNG block order is documented to
+    differ, so values are distribution-equal, not bitwise-equal)."""
+    rounds, clients, support = 3, 2, 4
+    ref = dist.sample_support_block_reference(np.random.default_rng(1),
+                                              rounds, clients, support)
+    vec = dist.sample_support_block(np.random.default_rng(1), rounds,
+                                    clients, support)
+    assert vec["x"].shape == ref["x"].shape
+    assert vec["y"].shape == ref["y"].shape
+    assert vec["x"].dtype == ref["x"].dtype == np.float32
+    assert vec["y"].dtype == ref["y"].dtype == np.int32
+    assert np.isfinite(vec["x"]).all()
+    assert vec["y"].min() >= 0 and vec["y"].max() < ways
+
+
+def test_base_distribution_block_falls_back_to_reference():
+    dist = SineTasks()
+    ref = dist.sample_support_block_reference(np.random.default_rng(4),
+                                              2, 2, 3)
+    base = super(SineTasks, dist).sample_support_block  # unbound fallback
+    got = base(np.random.default_rng(4), 2, 2, 3)
+    np.testing.assert_array_equal(ref["x"], got["x"])
+    np.testing.assert_array_equal(ref["y"], got["y"])
+
+
+def test_vectorized_sampler_trains(setup):
+    """End-to-end: the vectorized host path learns an adaptable init."""
+    params, dist = setup
+    out = tinyreptile_train(LOSS, params, dist, rounds=60, alpha=1.0,
+                            beta=0.02, support=8, seed=1, eval_every=60,
+                            eval_kwargs=EVAL, sampler="vectorized")
+    assert np.isfinite(out["history"][-1]["query_loss"])
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(out["params"]))
+
+
+# ---------------------------------------------------------------------------
+# the prefetcher itself
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_yields_in_order_and_closes():
+    pf = BlockPrefetcher(lambda i: i * i, 7, depth=2)
+    assert [pf.get() for _ in range(7)] == [i * i for i in range(7)]
+    # over-consumption raises instead of deadlocking on the empty queue
+    with pytest.raises(StopIteration):
+        pf.get()
+    pf.close()
+    pf.close()                                   # idempotent
+    with pytest.raises(StopIteration):
+        pf.get()                                 # closed -> exhausted
+
+
+def test_prefetcher_propagates_producer_errors():
+    def produce(i):
+        if i == 1:
+            raise RuntimeError("boom")
+        return i
+    pf = BlockPrefetcher(produce, 5, depth=2)
+    assert pf.get() == 0
+    with pytest.raises(RuntimeError, match="boom"):
+        pf.get()
+    pf.close()
+
+
+def test_prefetcher_early_close_does_not_deadlock():
+    pf = BlockPrefetcher(lambda i: i, 100, depth=1)
+    assert pf.get() == 0
+    pf.close()                                   # 99 items never consumed
+
+
+# ---------------------------------------------------------------------------
+# TinyMetaFed-style partial communication
+# ---------------------------------------------------------------------------
+
+def test_partial_channel_accounting(setup):
+    params, _ = setup
+    ch = PartialCommChannel(fraction=0.25)
+    want = sum(max(1, int(round(0.25 * x.size))) * 4
+               for x in jax.tree.leaves(params))
+    assert ch.payload_bytes(params) == want
+    assert ch.round_bytes(params, 3) == 2 * 3 * want
+    assert want < tree_bytes(params) // 3        # genuinely partial
+    # fraction=1.0 degenerates to the base fp32 accounting
+    assert PartialCommChannel(fraction=1.0).payload_bytes(params) == \
+        tree_bytes(params)
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            PartialCommChannel(fraction=bad)
+
+
+def test_partial_channel_masks_uplink_delta():
+    r = np.random.default_rng(0)
+    ref = {"w": jnp.asarray(r.normal(size=(128,)), jnp.float32)}
+    sent = {"w": jnp.asarray(r.normal(size=(128,)), jnp.float32)}
+    ch = PartialCommChannel(fraction=0.5)
+    got = np.asarray(ch.transmit(sent, ref=ref)["w"])
+    from_sent = got == np.asarray(sent["w"])
+    from_ref = got == np.asarray(ref["w"])
+    assert (from_sent | from_ref).all()
+    assert from_sent.sum() == ch.kept_entries(128)
+    # deterministic: the mask is fixed by mask_seed
+    again = np.asarray(ch.transmit(sent, ref=ref)["w"])
+    np.testing.assert_array_equal(got, again)
+    # no ref (downlink): value-exact broadcast
+    np.testing.assert_array_equal(np.asarray(ch.transmit(sent)["w"]),
+                                  np.asarray(sent["w"]))
+
+
+def test_partial_channel_int8_keeps_server_values_exact():
+    """On a quantizing wire, untransmitted entries fall back to the
+    server's OWN values bit-exactly — only transmitted entries carry
+    quantization noise."""
+    r = np.random.default_rng(2)
+    ref = {"w": jnp.asarray(r.normal(size=(128,)), jnp.float32)}
+    sent = {"w": jnp.asarray(r.normal(size=(128,)), jnp.float32)}
+    ch = PartialCommChannel(dtype="int8", fraction=0.5)
+    got = np.asarray(ch.transmit(sent, ref=ref)["w"])
+    wired = np.asarray(CommChannel("int8").transmit(sent)["w"])
+    from_ref = got == np.asarray(ref["w"])
+    from_wire = got == wired
+    assert (from_ref | from_wire).all()
+    assert from_ref.sum() >= 128 - ch.kept_entries(128)
+
+
+def test_quantize_true_on_fp32_wire_rejected():
+    with pytest.raises(ValueError):
+        CommChannel("float32", quantize=True)
+
+
+def test_partial_channel_wire_gating():
+    """quantize=False keeps the accounting-only contract (no dtype cast
+    anywhere), and quantizing partial downlinks stay value-exact."""
+    r = np.random.default_rng(3)
+    ref = {"w": jnp.asarray(r.normal(size=(64,)), jnp.float32)}
+    sent = {"w": jnp.asarray(r.normal(size=(64,)), jnp.float32)}
+    acct = PartialCommChannel(dtype="float16", quantize=False, fraction=0.5)
+    np.testing.assert_array_equal(np.asarray(acct.transmit(sent)["w"]),
+                                  np.asarray(sent["w"]))
+    up = np.asarray(acct.transmit(sent, ref=ref)["w"])
+    assert ((up == np.asarray(sent["w"])) | (up == np.asarray(ref["w"]))).all()
+    # metering still sees the compressed link: fp16 itemsize, half entries
+    assert acct.payload_bytes(ref) == acct.kept_entries(64) * 2
+    # quantizing partial downlink: kept entries ride the int8 wire,
+    # dropped entries stay exact — converging to the base channel at 1.0
+    ch = PartialCommChannel(dtype="int8", fraction=0.5)
+    down = np.asarray(ch.transmit(sent)["w"])
+    wired = np.asarray(CommChannel("int8").transmit(sent)["w"])
+    exact = down == np.asarray(sent["w"])
+    assert (exact | (down == wired)).all()
+    assert exact.sum() >= 64 - ch.kept_entries(64)
+    full = PartialCommChannel(dtype="int8", fraction=1.0)
+    np.testing.assert_array_equal(np.asarray(full.transmit(sent)["w"]),
+                                  wired)
+
+
+def test_partial_channel_trains_and_meters(setup):
+    params, dist = setup
+    ch = PartialCommChannel(fraction=0.5)
+    out = tinyreptile_train(LOSS, params, dist, rounds=30, alpha=1.0,
+                            beta=0.02, support=8, seed=1, channel=ch)
+    assert out["comm_bytes"] == 30 * 2 * ch.payload_bytes(params)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(out["params"]))
+
+
+def test_partial_channel_gradient_uplink(setup):
+    """FedSGD's uplink reference is zeros: untransmitted gradient entries
+    vanish rather than falling back to phi."""
+    params, dist = setup
+    out = fedsgd_train(LOSS, params, dist, rounds=10, beta=0.02, support=4,
+                       clients_per_round=2, seed=0,
+                       channel=PartialCommChannel(fraction=0.5))
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(out["params"]))
+
+
+# ---------------------------------------------------------------------------
+# runner cache counters
+# ---------------------------------------------------------------------------
+
+def test_runner_cache_stats_and_clear(setup, caplog):
+    params, dist = setup
+    clear_runner_cache()
+    stats = runner_cache_stats()
+    assert stats["currsize"] == 0 and stats["unhashable_misses"] == 0
+
+    kw = dict(rounds=5, alpha=1.0, beta=0.0703, support=4, seed=0)
+    tinyreptile_train(LOSS, params, dist, **kw)
+    tinyreptile_train(LOSS, params, dist, **kw)
+    stats = runner_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+
+    @dataclasses.dataclass(frozen=True)
+    class UnhashableStrategy(TinyReptileStrategy):
+        junk: list = dataclasses.field(default_factory=list)
+
+    from repro.core import run_federated
+    with caplog.at_level("WARNING", logger="repro.core.engine"):
+        run_federated(params, dist, UnhashableStrategy(LOSS), rounds=5,
+                      beta=0.0703, support=4, seed=0)
+    assert runner_cache_stats()["unhashable_misses"] == 1
+    assert any("unhashable" in r.message for r in caplog.records)
+
+    clear_runner_cache()
+    stats = runner_cache_stats()
+    assert stats["currsize"] == 0 and stats["unhashable_misses"] == 0
