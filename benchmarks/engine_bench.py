@@ -6,6 +6,13 @@ task. Acceptance floors: engine >= 3x the Python loops (PR 1) and
 pipelined >= 1.5x the synchronous engine (PR 2) for batched-client
 Reptile (clients_per_round=8) on CPU.
 
+A "heterogeneity" section (PR 3) benchmarks the ClientSchedule layer on
+the same batched-Reptile cohort: full participation vs 50% partial
+participation vs a straggler cohort — rounds/sec plus the transport
+bill (total and per-client min/max), showing that scenario plugins ride
+the fixed-shape scan at full speed while partial participation halves
+the bytes.
+
 Writes BENCH_engine.json next to the repo root (same spirit as the
 results/dryrun JSON cells consumed by benchmarks/report.py) so the
 speedup is tracked across future PRs.
@@ -13,7 +20,8 @@ speedup is tracked across future PRs.
   PYTHONPATH=src python -m benchmarks.engine_bench            # full run
   PYTHONPATH=src python -m benchmarks.engine_bench --json     # JSON out
   PYTHONPATH=src python -m benchmarks.engine_bench --rounds 8 --smoke
-                       # tier-1-budget smoke: pipeline on/off only
+                       # tier-1-budget smoke: pipeline on/off +
+                       # heterogeneity only (no legacy Python loops)
 """
 from __future__ import annotations
 
@@ -28,7 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_models import SINE_MLP
-from repro.core import reptile_train, tinyreptile_train
+from repro.core import (PartialParticipation, StragglerSampling,
+                        UniformSampling, reptile_train, tinyreptile_train)
 from repro.core.meta import finetune_batch, finetune_online, tree_lerp
 from repro.data import SineTasks
 from repro.models.paper_nets import init_paper_model, paper_model_loss
@@ -138,6 +147,48 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
         rows.append((f"engine/{name}_engine_pipelined", 1e6 / piped_rps,
                      f"rounds_per_sec={piped_rps:.1f} "
                      f"pipeline_speedup={pipeline_speedup:.2f}x"))
+
+    # -- heterogeneity: the ClientSchedule layer on the batched cohort --
+    cohorts = [
+        ("full_participation", UniformSampling("vectorized")),
+        ("partial_participation_50", PartialParticipation(
+            0.5, sampler="vectorized")),
+        ("straggler_cohort_25", StragglerSampling(
+            0.25, sampler="vectorized")),
+    ]
+    het = {}
+    # the policies carry their own sampler; pass only the pipeline knobs
+    # (run_federated rejects a non-default sampler= next to sampling=)
+    pipe_kw = {k: piped[k] for k in ("prefetch", "max_block")}
+    for name, policy in cohorts:
+        def run_policy(policy=policy):
+            out = reptile_train(LOSS, params, dist, rounds=rounds,
+                                alpha=1.0, beta=0.02, support=SUPPORT,
+                                epochs=8, clients_per_round=8, seed=0,
+                                sampling=policy, **pipe_kw)
+            jax.block_until_ready(jax.tree.leaves(out["params"])[0])
+            return out
+        out = run_policy()            # warmup: compile + byte accounting
+        t0 = time.perf_counter()
+        run_policy()
+        rps = rounds / (time.perf_counter() - t0)
+        het[name] = {
+            "rounds_per_sec": round(rps, 2),
+            "comm_bytes": out["comm_bytes"],
+            "per_client_bytes_min": min(out["per_client_bytes"]),
+            "per_client_bytes_max": max(out["per_client_bytes"]),
+        }
+        rows.append((f"engine/heterogeneity_{name}", 1e6 / rps,
+                     f"rounds_per_sec={rps:.1f} "
+                     f"comm_bytes={out['comm_bytes']}"))
+    full_rps = het["full_participation"]["rounds_per_sec"]
+    for name in ("partial_participation_50", "straggler_cohort_25"):
+        het[name]["vs_full_participation"] = round(
+            het[name]["rounds_per_sec"] / full_rps, 2)
+        het[name]["bytes_vs_full"] = round(
+            het[name]["comm_bytes"]
+            / het["full_participation"]["comm_bytes"], 3)
+    results["heterogeneity"] = het
 
     payload = {"bench": "engine", "status": "OK", "backend":
                jax.default_backend(), "rounds": rounds, "support": SUPPORT,

@@ -1,10 +1,13 @@
 """Keywords spotting (the paper's contributed TinyML dataset, §IV-A):
-federated meta-learning of a 4-way keyword classifier across simulated
-IoT clients, with the paper's resource accounting.
+federated meta-learning of a 4-way keyword classifier across a simulated
+heterogeneous IoT fleet, with the paper's resource accounting.
 
-This is the end-to-end driver of the paper's kind: a full federated
-meta-learning run (server + streaming clients + evaluation + memory
-metering) at the paper's own scale.
+This is the end-to-end driver of the paper's kind, upgraded to the
+engine's deployment-scenario plugins: the cohort runs through
+``run_federated`` with a ``PartialParticipation`` schedule — each round
+only half the fleet checks in, trains, and pays transport — and the run
+reports the per-client transport bill (paper Table-II style: bytes per
+device, not just a fleet total) next to the Table-II memory model.
 
   PYTHONPATH=src python examples/federated_keyword_spotting.py
 """
@@ -15,7 +18,9 @@ import jax
 import numpy as np
 
 from repro.configs.paper_models import KWS_CONV
-from repro.core import evaluate_init, reptile_train, tinyreptile_train
+from repro.core import (CommChannel, PartialParticipation, evaluate_init,
+                        run_federated, tinyreptile_train)
+from repro.core.strategies import TinyReptileStrategy
 from repro.data import KWSTasks
 from repro.metering import algorithm_memory_report
 from repro.models.paper_nets import (init_paper_model, paper_model_accuracy,
@@ -25,6 +30,10 @@ LOSS = functools.partial(paper_model_loss, KWS_CONV)
 ACC = functools.partial(paper_model_accuracy, KWS_CONV)
 EVAL = dict(num_tasks=8, support=16, k_steps=8, lr=0.01, query=32,
             metric_fn=ACC)
+
+ROUNDS = 200
+COHORT = 8          # fleet slots per round
+FRACTION = 0.5      # half the fleet checks in each round
 
 
 def main():
@@ -41,24 +50,48 @@ def main():
     base = evaluate_init(LOSS, params, dist, np.random.default_rng(3), **EVAL)
     print(f"random init accuracy: {base['query_metric']:.2%} (chance 25%)")
 
+    # --- serial TinyReptile (the paper's Algorithm 1 schema) ------------
     t0 = time.time()
-    tiny = tinyreptile_train(LOSS, params, dist, rounds=200, alpha=1.0,
+    tiny = tinyreptile_train(LOSS, params, dist, rounds=ROUNDS, alpha=1.0,
                              beta=0.01, support=16, eval_every=100,
                              eval_kwargs=EVAL, seed=1)
     t_tiny = time.time() - t0
     for ev in tiny["history"]:
         print(f"  TinyReptile round {ev['round']:4d}: "
               f"acc {ev['query_metric']:.2%}  loss {ev['query_loss']:.3f}")
+    print(f"TinyReptile serial final acc: "
+          f"{tiny['history'][-1]['query_metric']:.2%} ({t_tiny:.1f}s, "
+          f"{tiny['comm_bytes']/1024:.0f} KB total transport)")
 
+    # --- partial-participation fleet through the round engine -----------
+    policy = PartialParticipation(FRACTION)
     t0 = time.time()
-    rep = reptile_train(LOSS, params, dist, rounds=200, alpha=1.0, beta=0.01,
-                        support=16, epochs=8, eval_every=200,
-                        eval_kwargs=EVAL, seed=1)
-    t_rep = time.time() - t0
-    print(f"Reptile   final acc: {rep['history'][-1]['query_metric']:.2%} "
-          f"({t_rep:.1f}s)")
-    print(f"TinyReptile final acc: "
-          f"{tiny['history'][-1]['query_metric']:.2%} ({t_tiny:.1f}s)")
+    fleet = run_federated(params, dist, TinyReptileStrategy(LOSS),
+                          rounds=ROUNDS, clients_per_round=COHORT,
+                          alpha=1.0, beta=0.01, support=16, seed=1,
+                          eval_every=100, eval_kwargs=EVAL,
+                          sampling=policy)
+    t_fleet = time.time() - t0
+    for ev in fleet["history"]:
+        print(f"  fleet round {ev['round']:4d}: "
+              f"acc {ev['query_metric']:.2%}  loss {ev['query_loss']:.3f}")
+    print(f"partial-participation fleet ({COHORT} slots, "
+          f"{policy.cohort(COHORT)}/round check in) final acc: "
+          f"{fleet['history'][-1]['query_metric']:.2%} ({t_fleet:.1f}s)")
+
+    # --- per-client transport accounting (paper Table-II style) ---------
+    round_bill = 2 * CommChannel().payload_bytes(params)  # down + up
+    print(f"\ntransport accounting over {ROUNDS} rounds "
+          f"(fp32 wire, downlink + uplink, "
+          f"{round_bill / 1024:.1f} KB per participated round):")
+    print(f"  {'client':>8}  {'rounds':>7}  {'KB paid':>9}")
+    for c, paid in enumerate(fleet["per_client_bytes"]):
+        print(f"  {c:>8}  {paid // round_bill:>7}  {paid / 1024:>9.1f}")
+    total = fleet["comm_bytes"]
+    full = ROUNDS * COHORT * round_bill
+    print(f"  {'total':>8}  {ROUNDS * policy.cohort(COHORT):>7}  "
+          f"{total / 1024:>9.1f}   "
+          f"({total / full:.0%} of a full-participation fleet)")
 
 
 if __name__ == "__main__":

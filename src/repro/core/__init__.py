@@ -13,10 +13,13 @@ Architecture (post engine refactor):
                    config, Pallas server update on TPU.
   pipeline.py    — the host side: block planning (retrace-free padded
                    shapes), background prefetch (stage block N+1 while
-                   the device runs block N), and pluggable
-                   ``SamplingPolicy`` client sampling.
+                   the device runs block N), and the ``ClientSchedule``
+                   heterogeneity layer: pluggable ``SamplingPolicy``
+                   schedule producers (uniform, partial participation,
+                   stragglers).
   strategies.py  — ``FedStrategy`` objects: each algorithm reduced to
-                   ``client_update`` + ``server_aggregate`` hooks.
+                   ``client_update`` + ``server_aggregate`` hooks (plus
+                   schedule-aware weighted/step-masked variants).
   tinyreptile.py, reptile.py, fedavg.py, transfer.py
                  — thin, signature-stable entry points binding a strategy
                    to the engine (the public ``*_train`` API).
@@ -32,8 +35,10 @@ from repro.core.engine import (CommChannel, PartialCommChannel,  # noqa: F401
                                clear_runner_cache, run_federated,
                                runner_cache_stats)
 from repro.core.fedavg import fedavg_train, fedsgd_train  # noqa: F401
-from repro.core.pipeline import (BlockPrefetcher, SamplingPolicy,  # noqa: F401
-                                 UniformSampling, plan_blocks)
+from repro.core.pipeline import (BlockPrefetcher, ClientSchedule,  # noqa: F401
+                                 PartialParticipation, SamplingPolicy,
+                                 StragglerSampling, UniformSampling,
+                                 plan_blocks)
 from repro.core.meta import evaluate_init, finetune_batch, finetune_online  # noqa: F401
 from repro.core.reptile import reptile_train  # noqa: F401
 from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,  # noqa: F401

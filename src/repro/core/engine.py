@@ -20,19 +20,25 @@ dispatch per client per round. This module owns all of that once:
   once per (strategy, beta, channel) config; ``_BlockRunner.trace_count``
   makes that observable.
 * The host side is a producer/consumer pipeline (repro.core.pipeline):
-  client sampling is a pluggable ``SamplingPolicy`` (uniform i.i.d. by
-  default, with a legacy-exact "reference" RNG order and a vectorized
-  one-allocation fast path), and a background prefetch thread samples and
-  ``device_put``s block N+1 while the device runs block N (double
-  buffered). ``prefetch=0`` is the synchronous escape hatch; pipelined
-  and synchronous runs are bit-for-bit identical because the producer
-  consumes the host RNG in exactly the synchronous block order.
+  per-round round state is a structured ``ClientSchedule`` (participation
+  mask, per-client local step counts, aggregation weights, absolute
+  round index) planned by a pluggable ``SamplingPolicy`` — uniform
+  i.i.d. by default (with a legacy-exact "reference" RNG order and a
+  vectorized one-allocation fast path), ``PartialParticipation`` and
+  ``StragglerSampling`` as deployment-scenario plugins — and a
+  background prefetch thread plans, samples, and ``device_put``s block
+  N+1 while the device runs block N (double buffered). ``prefetch=0``
+  is the synchronous escape hatch; pipelined and synchronous runs are
+  bit-for-bit identical because the producer consumes the host RNG in
+  exactly the synchronous block order.
 * A pluggable ``CommChannel`` does the paper's Table-II byte accounting
   for fp32/fp16/int8 payloads and can optionally *simulate* the quantized
   transport (int8 motivated by TIFeD's integer-based FL).
   ``PartialCommChannel`` additionally transmits only a per-round
   parameter FRACTION (TinyMetaFed-style partial communication): masked
-  uplink deltas plus fraction-scaled accounting.
+  uplink deltas plus fraction-scaled accounting, billed per
+  participating client, with optional per-round rotating masks that
+  cover every parameter entry once per ``ceil(1/fraction)`` rounds.
 * The server update routes through the fused Pallas kernel
   (``repro.kernels.ops.meta_update``) by default on TPU backends;
   elsewhere the same fp32 math runs as plain XLA (the kernel would only
@@ -50,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import logging
+import math
 from typing import Dict, List, Optional
 
 import jax
@@ -57,9 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.meta import evaluate_init
-from repro.core.pipeline import (SamplingPolicy, UniformSampling,
-                                 plan_blocks, prefetch_items,
-                                 single_device_of)
+from repro.core.pipeline import (ClientSchedule, SamplingPolicy,
+                                 UniformSampling, plan_blocks,
+                                 prefetch_items, single_device_of)
 from repro.data.tasks import TaskDistribution
 
 logger = logging.getLogger(__name__)
@@ -157,6 +164,13 @@ class CommChannel:
         itemsize = PAYLOAD_ITEMSIZE[self.dtype]
         return sum(x.size * itemsize for x in jax.tree.leaves(tree))
 
+    def payload_bytes_at(self, tree, round_index: int) -> int:
+        """Per-round exact payload. Equal to ``payload_bytes`` for every
+        channel except rotating partial masks, whose per-round payload
+        is the round's chunk (see PartialCommChannel)."""
+        del round_index
+        return self.payload_bytes(tree)
+
     def round_bytes(self, tree, clients: int) -> int:
         """Downlink (phi out) + uplink (result back) for every client."""
         return 2 * clients * self.payload_bytes(tree)
@@ -175,12 +189,13 @@ class CommChannel:
             return jax.tree.map(q_int8, tree)
         return tree
 
-    def transmit(self, tree, ref=None, masks=None):
+    def transmit(self, tree, ref=None, masks=None, round_index=None):
         """Simulated wire round-trip. ``ref`` is the engine-provided
-        server-side reference tree for delta-style transports and
-        ``masks`` a precomputed keep-mask tree (see PartialCommChannel);
-        the base channel ignores both."""
-        del ref, masks
+        server-side reference tree for delta-style transports, ``masks``
+        a precomputed keep-mask tree, and ``round_index`` the absolute
+        round for rotating masks (see PartialCommChannel); the base
+        channel ignores all three."""
+        del ref, masks, round_index
         if not self.simulates_quantization:
             return tree
         return self._wire(tree)
@@ -205,11 +220,25 @@ class PartialCommChannel(CommChannel):
     ride the dtype wire (fp16/int8 quantized); untransmitted entries
     approximate the client's stale copy with the server's exact value
     (clients are stateless in this simulation). Both directions converge
-    to the base channel as fraction -> 1. The keep mask is fixed per
-    run; rotating masks are a mask_seed sweep away.
+    to the base channel as fraction -> 1.
+
+    rotate=False (default): ONE fixed keep mask for the whole run, with
+    exactly ``kept_entries(n) = max(1, round(fraction * n))`` entries
+    per leaf. rotate=True: the mask ROTATES every round — each leaf's
+    entries are split (in a fixed ``mask_seed``-keyed permutation order)
+    into ``rotation_period = ceil(1/fraction)`` near-equal chunks, and
+    round r transmits chunk ``r % rotation_period``, so EVERY parameter
+    entry crosses the wire within one rotation period and a full period
+    accounts exactly one complete tree at the wire itemsize (per-round
+    chunk sizes differ by at most one entry per leaf;
+    ``payload_bytes_at`` is the per-round exact meter). Both ends derive
+    the round's mask from (mask_seed, round index), so no index
+    side-channel is metered; inside the engine's scan the round index is
+    folded in from the ClientSchedule carry — no per-round host work.
     """
     fraction: float = 0.5
     mask_seed: int = 0
+    rotate: bool = False
 
     needs_uplink_ref = True
 
@@ -220,12 +249,41 @@ class PartialCommChannel(CommChannel):
                              f"{self.fraction!r}")
 
     def kept_entries(self, n: int) -> int:
-        """How many of a leaf's n entries are transmitted per round."""
+        """How many of a leaf's n entries are transmitted per round.
+        Fixed masks: max(1, round(fraction * n)). Rotating masks
+        transmit the round's CHUNK — 1/rotation_period of the entries,
+        which only equals the fraction when 1/fraction is an integer —
+        so this reports round 0's (largest) chunk and
+        ``kept_entries_at`` is the per-round exact count."""
+        if self.rotate:
+            return self.kept_entries_at(n, 0)
         return max(1, int(round(self.fraction * n)))
+
+    @property
+    def rotation_period(self) -> int:
+        """Rounds until a rotating mask has covered every entry:
+        ceil(1/fraction), guarded against float noise (1/(1/3) slightly
+        above 3 must still give period 3)."""
+        return max(1, math.ceil(1.0 / self.fraction - 1e-9))
+
+    def kept_entries_at(self, n: int, round_index: int) -> int:
+        """Entries of an n-entry leaf transmitted at ``round_index`` under
+        rotation: the size of chunk (round_index % period) in the
+        balanced split (first n % period chunks get the extra entry)."""
+        period = self.rotation_period
+        j = round_index % period
+        return n // period + (1 if j < n % period else 0)
 
     def payload_bytes(self, tree) -> int:
         itemsize = PAYLOAD_ITEMSIZE[self.dtype]
         return sum(self.kept_entries(x.size) * itemsize
+                   for x in jax.tree.leaves(tree))
+
+    def payload_bytes_at(self, tree, round_index: int) -> int:
+        if not self.rotate:
+            return self.payload_bytes(tree)
+        itemsize = PAYLOAD_ITEMSIZE[self.dtype]
+        return sum(self.kept_entries_at(x.size, round_index) * itemsize
                    for x in jax.tree.leaves(tree))
 
     @property
@@ -234,9 +292,43 @@ class PartialCommChannel(CommChannel):
             return True
         return CommChannel.simulates_quantization.fget(self)
 
-    def mask_tree(self, tree):
-        """Deterministic boolean keep-masks, one per leaf, with exactly
-        ``kept_entries(leaf.size)`` True entries (matches the accounting)."""
+    def chunk_id_tree(self, tree):
+        """Static rotation state: per leaf, an int32 array (leaf-shaped)
+        assigning every entry to one of ``rotation_period`` balanced
+        chunks in ``mask_seed``-keyed permutation order. Round r's keep
+        mask is just ``chunk_ids == r % rotation_period`` — cheap enough
+        to evaluate inside the scan with a traced round index."""
+        period = self.rotation_period
+        leaves, treedef = jax.tree.flatten(tree)
+        key = jax.random.PRNGKey(self.mask_seed)
+        ids = []
+        for i, leaf in enumerate(leaves):
+            n = leaf.size
+            perm = jax.random.permutation(jax.random.fold_in(key, i), n)
+            sizes = np.full(period, n // period, np.int32)
+            sizes[: n % period] += 1
+            chunk_of_pos = jnp.asarray(
+                np.repeat(np.arange(period, dtype=np.int32), sizes))
+            leaf_ids = jnp.zeros((n,), jnp.int32).at[perm].set(chunk_of_pos)
+            ids.append(leaf_ids.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, ids)
+
+    def masks_for_round(self, chunk_ids, round_index):
+        """Round ``round_index``'s keep-masks from precomputed chunk ids
+        — the single source of the rotation rule (the engine's scan body
+        calls this with the ClientSchedule's traced round index)."""
+        phase = jnp.mod(round_index, self.rotation_period)
+        return jax.tree.map(lambda ids: ids == phase, chunk_ids)
+
+    def mask_tree(self, tree, round_index=None):
+        """Boolean keep-masks, one per leaf. Fixed masks (rotate=False)
+        have exactly ``kept_entries(leaf.size)`` True entries (matches
+        the accounting); rotating masks select round ``round_index``'s
+        chunk (default round 0). ``round_index`` may be traced."""
+        if self.rotate:
+            return self.masks_for_round(
+                self.chunk_id_tree(tree),
+                0 if round_index is None else round_index)
         leaves, treedef = jax.tree.flatten(tree)
         key = jax.random.PRNGKey(self.mask_seed)
         masks = []
@@ -248,7 +340,7 @@ class PartialCommChannel(CommChannel):
             masks.append(m.reshape(leaf.shape))
         return jax.tree.unflatten(treedef, masks)
 
-    def transmit(self, tree, ref=None, masks=None):
+    def transmit(self, tree, ref=None, masks=None, round_index=None):
         # the base dtype simulation is gated on the BASE quantize decision
         # (quantize=False keeps the accounting-only contract: values pass
         # untouched even though fraction < 1 makes this channel simulate)
@@ -259,8 +351,10 @@ class PartialCommChannel(CommChannel):
             return tree                          # differs from the fallback
         if masks is None:
             # inside a scan, pass precomputed masks instead: the keep
-            # mask is constant per run, the permutations are not free
-            masks = self.mask_tree(tree if ref is None else ref)
+            # masks (or the rotating chunk ids behind them) are constant
+            # per run, the permutations are not free
+            masks = self.mask_tree(tree if ref is None else ref,
+                                   round_index)
         sent = self._wire(tree) if base_wire else tree
         if ref is None:
             # downlink: kept entries ride the wire dtype; dropped entries
@@ -274,33 +368,68 @@ class PartialCommChannel(CommChannel):
 
 class _BlockRunner:
     """Compiled block executor: lax.scan over the padded round axis whose
-    body vmaps client_update across clients; per-round validity mask via
+    body vmaps the client hook across clients; per-round validity via
     ``lax.cond`` so padded rounds are runtime no-ops (phi passes through
     untouched — bit-for-bit identical to an unpadded scan). phi is
     donated — successive blocks update in place.
 
+    The scan's xs are ``(ClientSchedule, batch)``: the whole per-round,
+    per-client round state (participation, local step counts,
+    aggregation weights, absolute round index) rides the scan carry as
+    device arrays, so heterogeneous rounds cost ZERO extra host
+    dispatches. ``scheduled`` is a static flag baked in from the
+    sampling policy's ``schedule_kind``:
+
+    * scheduled=False (UniformSampling): the legacy unweighted body —
+      ``client_update`` + ``server_aggregate`` — bit-for-bit identical
+      to the pre-schedule engine (the schedule arrays are threaded but
+      unused, so XLA drops them).
+    * scheduled=True: ``client_update_steps`` honors each client's
+      traced step budget and ``server_aggregate_weighted`` applies the
+      round's normalized weights; the reported round loss is the
+      weighted mean of each client's per-live-step mean loss.
+
+    Rotating partial-comm masks fold the schedule's round index into the
+    mask inside the scan body (``chunk_ids == round % period``); the
+    expensive per-leaf permutations happen once per block, outside it.
+
     ``trace_count`` increments once per jit trace; with the engine's
-    fixed per-run block shape it stays at 1 per input shape config — the
-    retrace-free contract's observable.
+    fixed per-run block shape it stays at 1 per (strategy, beta,
+    channel, schedule-shape) config — the retrace-free contract's
+    observable.
     """
 
-    def __init__(self, strategy, beta, channel: CommChannel):
+    def __init__(self, strategy, beta, channel: CommChannel,
+                 scheduled: bool = False):
         self.trace_count = 0
         beta_f = jnp.float32(beta)
         simulate = channel.simulates_quantization
         uplink_ref = getattr(strategy, "uplink_ref", "params")
         needs_ref = getattr(channel, "needs_uplink_ref", False)
+        partial = getattr(channel, "fraction", 1.0) < 1.0
+        rotating = partial and bool(getattr(channel, "rotate", False))
 
-        def make_round_fn(masks):
+        def make_round_fn(masks, chunk_ids):
             def round_fn(phi, xs):
-                valid_t, alpha_t, batch = xs      # batch leaves: (C, S, ...)
+                sched, batch = xs    # sched: one ClientSchedule row;
+                #                      batch leaves: (C, S, ...)
 
                 def live(phi):
-                    phi_down = (channel.transmit(phi, masks=masks)
+                    m = masks
+                    if chunk_ids is not None:
+                        m = channel.masks_for_round(chunk_ids,
+                                                    sched.round_index)
+                    phi_down = (channel.transmit(phi, masks=m)
                                 if simulate else phi)
-                    results, losses = jax.vmap(
-                        lambda b: strategy.client_update(phi_down, b,
-                                                         beta_f))(batch)
+                    if scheduled:
+                        results, losses = jax.vmap(
+                            lambda b, k: strategy.client_update_steps(
+                                phi_down, b, beta_f, k))(
+                            batch, sched.local_steps)
+                    else:
+                        results, losses = jax.vmap(
+                            lambda b: strategy.client_update(phi_down, b,
+                                                             beta_f))(batch)
                     if simulate:
                         # the uplink fallback is the SERVER's own state
                         # (phi, pre-wire), not the quantized broadcast
@@ -312,50 +441,72 @@ class _BlockRunner:
                             ref = jax.tree.map(jnp.zeros_like, phi)
                         results = channel.transmit(
                             results, ref=ref,
-                            masks=masks if ref is not None else None)
-                    phi = strategy.server_aggregate(phi, results, alpha_t,
-                                                    beta_f)
-                    return phi, jnp.mean(losses)
+                            masks=m if ref is not None else None)
+                    if scheduled:
+                        phi = strategy.server_aggregate_weighted(
+                            phi, results, sched.alpha, beta_f,
+                            sched.weights)
+                        k = jnp.maximum(sched.local_steps,
+                                        1).astype(jnp.float32)
+                        per_client = losses.reshape(
+                            (losses.shape[0], -1)).sum(axis=1) / k
+                        # zero-weight clients are inert here too: their
+                        # loss on a zeroed batch may be non-finite and
+                        # 0 * NaN would poison the round loss (same
+                        # guard as strategies.weighted_client_mean)
+                        loss = jnp.sum(sched.weights * jnp.where(
+                            sched.weights > 0, per_client, 0.0))
+                    else:
+                        phi = strategy.server_aggregate(phi, results,
+                                                        sched.alpha, beta_f)
+                        loss = jnp.mean(losses)
+                    return phi, loss
 
                 def dead(phi):
                     return phi, jnp.float32(0.0)
 
-                return jax.lax.cond(valid_t, live, dead, phi)
+                return jax.lax.cond(sched.valid, live, dead, phi)
             return round_fn
 
-        def run_block(phi, valid, alphas, batch):
+        def run_block(phi, sched, batch):
             self.trace_count += 1                 # runs at trace time only
-            # the partial-channel keep mask is constant for the whole run:
-            # build it here, OUTSIDE the scan body, so the per-leaf
+            # the partial-channel mask state is constant for the whole
+            # run: build it here, OUTSIDE the scan body, so the per-leaf
             # permutations execute once per block instead of every round
+            # (rotating channels precompute chunk ids; the per-round mask
+            # is one elementwise compare against the scanned round index)
             masks = (channel.mask_tree(phi)
-                     if simulate and getattr(channel, "fraction", 1.0) < 1.0
-                     else None)
-            return jax.lax.scan(make_round_fn(masks), phi,
-                                (valid, alphas, batch))
+                     if simulate and partial and not rotating else None)
+            chunk_ids = (channel.chunk_id_tree(phi)
+                         if simulate and rotating else None)
+            return jax.lax.scan(make_round_fn(masks, chunk_ids), phi,
+                                (sched, batch))
 
         self._jit = jax.jit(run_block, donate_argnums=(0,))
 
-    def __call__(self, phi, valid, alphas, batch):
-        return self._jit(phi, valid, alphas, batch)
+    def __call__(self, phi, sched, batch):
+        return self._jit(phi, sched, batch)
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_block_runner(strategy, beta, channel) -> _BlockRunner:
-    return _BlockRunner(strategy, beta, channel)
+def _cached_block_runner(strategy, beta, channel, scheduled) -> _BlockRunner:
+    return _BlockRunner(strategy, beta, channel, scheduled)
 
 
 _UNHASHABLE_MISSES = {"count": 0}
 
 
-def _block_runner(strategy, beta, channel: CommChannel) -> _BlockRunner:
+def _block_runner(strategy, beta, channel: CommChannel,
+                  scheduled: bool = False) -> _BlockRunner:
     """Strategies and channels are frozen dataclasses, so identically-
     configured runs (every test/bench re-entry) reuse one jitted runner
-    instead of recompiling per call. Unhashable custom strategies still
-    work — they pay a fresh trace per run, counted and logged so sweeps
-    notice."""
+    instead of recompiling per call; ``scheduled`` (the policy's static
+    schedule shape) is part of the key. Unhashable custom strategies
+    still work — they pay a fresh trace per run, counted and logged so
+    sweeps notice."""
     try:
-        return _cached_block_runner(strategy, float(beta), channel)
+        return _cached_block_runner(strategy, float(beta), channel,
+                                    bool(scheduled))
     except TypeError:
         _UNHASHABLE_MISSES["count"] += 1
         logger.warning(
@@ -364,7 +515,7 @@ def _block_runner(strategy, beta, channel: CommChannel) -> _BlockRunner:
             "per run). Make custom strategies frozen dataclasses to cache "
             "them.", _UNHASHABLE_MISSES["count"],
             type(strategy).__name__, type(channel).__name__)
-        return _BlockRunner(strategy, beta, channel)
+        return _BlockRunner(strategy, beta, channel, scheduled)
 
 
 def runner_cache_stats() -> Dict[str, int]:
@@ -395,65 +546,113 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   sampling: Optional[SamplingPolicy] = None) -> Dict:
     """Run `rounds` federated rounds of `strategy`.
 
-    Returns {"params", "history"} (+ "comm_bytes" for strategies that
-    meter communication). History rows are per-eval dicts in the legacy
-    loops' format: evaluate_init fields + round [+ comm_bytes,
-    inner_loss].
+    Returns {"params", "history"} (+ "comm_bytes" and "per_client_bytes"
+    for strategies that meter communication — per_client_bytes[c] is the
+    total transport paid by cohort slot c over the run; only rounds the
+    slot PARTICIPATES in are billed). History rows are per-eval dicts in
+    the legacy loops' format: evaluate_init fields + round
+    [+ comm_bytes, inner_loss].
 
     Rounds between evals execute as fixed-shape on-device scan blocks
     (padded to one per-run length, masked, `max_block`-bounded — see
     repro.core.pipeline.plan_blocks), so the block runner compiles once
-    per config. The host only samples client data (`sampling` policy;
-    `sampler` picks the legacy-exact "reference" RNG order or the
-    "vectorized" fast path) and runs the eval protocol. With
-    `prefetch` > 0 a background thread samples and stages block N+1
-    while the device runs block N (double-buffered at the default 2);
-    `prefetch=0` is the synchronous escape hatch — both schedules are
+    per (strategy, beta, channel, schedule-shape) config. The host only
+    plans the per-round ClientSchedule and samples client data
+    (`sampling` policy; `sampler` picks the legacy-exact "reference" RNG
+    order or the "vectorized" fast path for the default uniform policy)
+    and runs the eval protocol — heterogeneous scenarios (partial
+    participation, stragglers, rotating partial-comm masks) ride the
+    schedule through the scan with no extra per-round host dispatches.
+    With `prefetch` > 0 a background thread plans, samples, and stages
+    block N+1 while the device runs block N (double-buffered at the
+    default 2); `prefetch=0` is the synchronous escape hatch — both are
     bit-for-bit identical.
     """
     if channel is None:
         channel = CommChannel()
     if sampling is None:
         sampling = UniformSampling(sampler)
+    elif sampler != "reference":
+        # an explicit policy owns its own sampler choice; silently
+        # ignoring a non-default `sampler=` string would run a different
+        # host path than the caller asked for
+        raise ValueError(
+            f"pass the sampler on the sampling policy (e.g. "
+            f"{type(sampling).__name__}(..., sampler={sampler!r})), not "
+            f"as run_federated(sampler=...) alongside sampling=")
     rng = np.random.default_rng(seed)
     # private copy: the block runner donates its phi argument, and the
     # caller's init_params must stay usable (they are reused across runs)
     phi = jax.tree.map(jnp.array, init_params)
     history: List[Dict] = []
     comm_bytes = 0
-    per_round_bytes = (channel.round_bytes(init_params, clients_per_round)
-                       if strategy.meters_comm else 0)
-    run_block = _block_runner(strategy, beta, channel)
+    per_client_bytes = np.zeros(clients_per_round, np.int64)
+    scheduled = getattr(sampling, "schedule_kind", "scheduled") != "uniform"
+    budget = int(strategy.local_step_budget(support))
+    run_block = _block_runner(strategy, beta, channel, scheduled)
     blocks, pad = plan_blocks(rounds, eval_every, max_block)
     device = single_device_of(phi)       # staging target for the prefetcher
+    if strategy.meters_comm:
+        # per-round payloads repeat with the channel's rotation period
+        # (period 1 = the constant legacy accounting)
+        period = (channel.rotation_period
+                  if getattr(channel, "rotate", False) else 1)
+        payload_by_phase = np.array(
+            [channel.payload_bytes_at(init_params, j) for j in range(period)],
+            np.int64)
 
     def stage(i):
-        """Sample, pad, and device-stage block i. Called strictly in
-        block order (inline, or from the single prefetch thread), so the
-        host RNG stream is schedule-independent."""
+        """Plan the schedule, sample, pad, and device-stage block i.
+        Called strictly in block order (inline, or from the single
+        prefetch thread), so the host RNG stream is
+        prefetch-schedule-independent: plan_schedule draws first, then
+        sample_block, every block."""
         start, end = blocks[i]
         blk = end - start
+        plan = sampling.plan_schedule(rng, start, end, clients_per_round,
+                                      budget)
+        part = np.asarray(plan["participation"], bool)
         batch = sampling.sample_block(task_dist, rng, blk, clients_per_round,
-                                      support, strategy.data_mode)
+                                      support, strategy.data_mode,
+                                      participation=part)
         r = np.arange(start, end)
         alphas = np.zeros(pad, np.float32)
         alphas[:blk] = alpha * (1 - r / rounds) if anneal else alpha
         valid = np.zeros(pad, bool)
         valid[:blk] = True
+        round_index = np.zeros(pad, np.int32)
+        round_index[:blk] = r
+
+        def pad_rows(a, dtype):
+            out = np.zeros((pad, clients_per_round), dtype)
+            out[:blk] = a
+            return out
+
+        sched = ClientSchedule(
+            valid=valid, alpha=alphas, round_index=round_index,
+            participation=pad_rows(part, bool),
+            local_steps=pad_rows(plan["local_steps"], np.int32),
+            weights=pad_rows(plan["weights"], np.float32))
         if blk < pad:
             batch = {k: np.concatenate(
                 [np.asarray(v),
                  np.zeros((pad - blk,) + np.asarray(v).shape[1:],
                           np.asarray(v).dtype)]) for k, v in batch.items()}
-        return jax.device_put((valid, alphas, batch), device)
+        return part, jax.device_put((sched, batch), device)
 
     staged_iter = prefetch_items(stage, len(blocks), depth=prefetch)
     try:
-        for (start, end), staged in zip(blocks, staged_iter):
-            valid_d, alphas_d, batch_d = staged
-            phi, round_losses = run_block(phi, valid_d, alphas_d, batch_d)
+        for (start, end), (part, staged) in zip(blocks, staged_iter):
+            sched_d, batch_d = staged
+            phi, round_losses = run_block(phi, sched_d, batch_d)
             blk = end - start
-            comm_bytes += blk * per_round_bytes
+            if strategy.meters_comm:
+                # bill downlink + uplink per participating client, at the
+                # round's exact (possibly rotating) payload
+                payloads = payload_by_phase[
+                    np.arange(start, end) % len(payload_by_phase)]
+                per_client_bytes += (2 * payloads[:, None] * part).sum(0)
+                comm_bytes += int((2 * payloads * part.sum(axis=1)).sum())
             if eval_every and end % eval_every == 0:
                 ev = evaluate_init(strategy.loss_fn, phi, task_dist,
                                    np.random.default_rng(10_000 + end - 1),
@@ -470,4 +669,5 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     out = {"params": phi, "history": history}
     if strategy.meters_comm:
         out["comm_bytes"] = comm_bytes
+        out["per_client_bytes"] = [int(b) for b in per_client_bytes]
     return out

@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional
 
 from repro.core.engine import CommChannel, run_federated
+from repro.core.pipeline import SamplingPolicy
 from repro.core.strategies import FedAvgStrategy, FedSGDStrategy
 from repro.data.tasks import TaskDistribution
 
@@ -23,14 +24,17 @@ def fedavg_train(loss_fn: Callable, init_params,
                  eval_kwargs: Optional[dict] = None,
                  channel: Optional[CommChannel] = None,
                  prefetch: int = 2, sampler: str = "reference",
-                 max_block: int = 512) -> Dict:
-    """FedAVG: clients run E local epochs; server averages the MODELS."""
+                 max_block: int = 512,
+                 sampling: Optional[SamplingPolicy] = None) -> Dict:
+    """FedAVG: clients run E local epochs; server averages the MODELS
+    (participation-weighted under a heterogeneity `sampling` policy)."""
     return run_federated(
         init_params, task_dist, FedAvgStrategy(loss_fn, epochs=epochs),
         rounds=rounds, clients_per_round=clients_per_round, alpha=1.0,
         beta=beta, support=support, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
-        prefetch=prefetch, sampler=sampler, max_block=max_block)
+        prefetch=prefetch, sampler=sampler, max_block=max_block,
+        sampling=sampling)
 
 
 def fedsgd_train(loss_fn: Callable, init_params,
@@ -41,11 +45,14 @@ def fedsgd_train(loss_fn: Callable, init_params,
                  eval_kwargs: Optional[dict] = None,
                  channel: Optional[CommChannel] = None,
                  prefetch: int = 2, sampler: str = "reference",
-                 max_block: int = 512) -> Dict:
-    """FedSGD: each client sends ONE gradient; server applies the mean."""
+                 max_block: int = 512,
+                 sampling: Optional[SamplingPolicy] = None) -> Dict:
+    """FedSGD: each client sends ONE gradient; server applies the mean
+    (participation-weighted under a heterogeneity `sampling` policy)."""
     return run_federated(
         init_params, task_dist, FedSGDStrategy(loss_fn),
         rounds=rounds, clients_per_round=clients_per_round, alpha=1.0,
         beta=beta, support=support, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
-        prefetch=prefetch, sampler=sampler, max_block=max_block)
+        prefetch=prefetch, sampler=sampler, max_block=max_block,
+        sampling=sampling)

@@ -59,6 +59,47 @@ def finetune_online(loss_fn, params, xs, ys, lr):
     return params, losses
 
 
+def finetune_online_masked(loss_fn, params, xs, ys, lr, k):
+    """``finetune_online`` with a TRACED per-client step budget ``k``:
+    only the first k of the S streamed samples update the params; later
+    steps are ``lax.cond`` no-ops (0 loss, params pass through), so the
+    shape stays fixed and straggler clients vmap/scan with the rest of
+    the cohort without retracing. ``k == S`` reproduces
+    ``finetune_online``'s math op-for-op. Engine-internal: traced inside
+    the block runner, hence no jit wrapper of its own."""
+    def body(p, xyi):
+        x, y, i = xyi
+
+        def live(p):
+            batch = {"x": x[None], "y": y[None]}
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            return jax.tree.map(lambda w, gg: w - lr * gg, p, g), loss
+
+        def dead(p):
+            return p, jnp.float32(0.0)
+
+        return jax.lax.cond(i < k, live, dead, p)
+    steps = jnp.arange(xs.shape[0])
+    return jax.lax.scan(body, params, (xs, ys, steps))
+
+
+def finetune_batch_masked(loss_fn, params, batch, steps: int, lr, k):
+    """``finetune_batch`` with a static upper bound ``steps`` and a
+    TRACED live-step count ``k``: epochs >= k are ``lax.cond`` no-ops
+    (0 loss). ``k == steps`` reproduces ``finetune_batch`` op-for-op.
+    Engine-internal (see ``finetune_online_masked``)."""
+    def body(p, i):
+        def live(p):
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            return jax.tree.map(lambda w, gg: w - lr * gg, p, g), loss
+
+        def dead(p):
+            return p, jnp.float32(0.0)
+
+        return jax.lax.cond(i < k, live, dead, p)
+    return jax.lax.scan(body, params, jnp.arange(steps))
+
+
 def evaluate_init(loss_fn: Callable, params, task_dist: TaskDistribution,
                   rng: np.random.Generator, *, num_tasks: int = 10,
                   support: int = 8, query: int = 64, k_steps: int = 8,

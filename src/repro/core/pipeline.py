@@ -1,33 +1,45 @@
 """Host/device round pipeline: block planning, background prefetch, and
-pluggable client-sampling policies for the federated round engine.
+pluggable client-scheduling policies for the federated round engine.
 
-PR 1 moved the round math on-device (vmap x lax.scan); this module closes
-the remaining host/device gap:
+PR 1 moved the round math on-device (vmap x lax.scan); PR 2 closed the
+host/device gap (fixed-shape blocks, background prefetch); this module
+now also owns the engine's per-round, per-client ROUND STATE:
 
 - ``plan_blocks``: split a run into scan blocks at eval boundaries and
   ``max_block``, and pick ONE fixed padded length for every block in the
   run — the retrace-free shape contract (the block runner compiles once
-  per strategy/channel config; uneven eval/tail blocks are padded and
-  masked instead of re-traced).
+  per strategy/channel/schedule-shape config; uneven eval/tail blocks
+  are padded and masked instead of re-traced).
 - ``BlockPrefetcher``: a background producer thread (the levanter
   background-data-loading pattern) that samples and stages block N+1
   while the device runs block N. Double-buffered at depth=2; the
   producer runs strictly in block order, so a seeded host RNG consumed
   inside ``produce`` sees exactly the synchronous draw order — pipelined
   and synchronous runs are bit-for-bit identical.
-- ``SamplingPolicy`` / ``UniformSampling``: which client tasks feed each
-  round is a policy object. Uniform i.i.d. sampling (the paper's schema)
-  is the default; partial-participation / straggler policies plug in here
-  without touching the engine.
+- ``ClientSchedule``: the structured scan carry that replaced the old
+  "scalar validity bit + alpha" tuple. Per padded round it carries the
+  validity bit, the annealed server rate, the ABSOLUTE round index
+  (rotating ``PartialCommChannel`` masks fold it into their mask key
+  inside the scan), and per cohort slot a participation mask, a local
+  step count, and an aggregation weight. It is a registered pytree, so
+  it device-stages through the prefetcher and slices through
+  ``lax.scan`` like any other block input.
+- ``SamplingPolicy``: which client tasks feed each round AND what the
+  round's schedule looks like. ``UniformSampling`` (the paper's schema:
+  everyone shows up, same step count, uniform weights) keeps the
+  engine's legacy bit-for-bit fast path; ``PartialParticipation`` and
+  ``StragglerSampling`` are the deployment-scenario plugins — a new
+  scenario is a policy object, not a sixth training loop.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
 import threading
-from typing import Callable, Dict, Iterator, List, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 SAMPLERS = ("reference", "vectorized")
 
@@ -162,23 +174,107 @@ def prefetch_items(produce: Callable[[int], object], n: int,
         pf.close()
 
 
-class SamplingPolicy:
-    """Decides which client tasks feed each round of a block.
+@dataclasses.dataclass(frozen=True)
+class ClientSchedule:
+    """Per-round, per-client round state threaded through the block scan.
 
-    ``sample_block`` must consume ``rng`` deterministically (the prefetch
-    pipeline replays it in block order) and return NumPy arrays shaped
-    ``{"x": (rounds, clients, support, ...), "y": ...}``.
+    One instance describes a whole padded block; ``lax.scan`` slices the
+    leading (padded rounds) axis so each scan step sees one round's row.
+
+    valid:          (R,)    bool — False on padded rounds (runtime no-op).
+    alpha:          (R,)    f32  — annealed server rate for the round.
+    round_index:    (R,)    i32  — ABSOLUTE round number; rotating
+                    partial-comm masks fold it into their mask key.
+    participation:  (R, C)  bool — which cohort slots train (and pay
+                    transport) this round.
+    local_steps:    (R, C)  i32  — per-client local step budget k_i, in
+                    the strategy's own units (stream samples / epochs).
+    weights:        (R, C)  f32  — aggregation weights, normalized per
+                    round (0 for non-participants).
+    """
+    valid: object
+    alpha: object
+    round_index: object
+    participation: object
+    local_steps: object
+    weights: object
+
+    _FIELDS = ("valid", "alpha", "round_index", "participation",
+               "local_steps", "weights")
+
+
+jax.tree_util.register_pytree_node(
+    ClientSchedule,
+    lambda s: (tuple(getattr(s, f) for f in ClientSchedule._FIELDS), None),
+    lambda _, children: ClientSchedule(*children))
+
+
+class SamplingPolicy:
+    """Decides which client tasks feed each round of a block AND what the
+    round's heterogeneity schedule is (who shows up, how many local steps
+    each client runs, how the server weights their results).
+
+    Both hooks must consume ``rng`` deterministically (the prefetch
+    pipeline replays them strictly in block order): the engine calls
+    ``plan_schedule`` first, then ``sample_block`` with the resulting
+    participation mask.
+
+    ``schedule_kind`` is a STATIC descriptor baked into the block
+    runner's cache key: "uniform" keeps the legacy unweighted scan body
+    (bit-for-bit identical to the pre-schedule engine), anything else
+    selects the schedule-aware body (weighted aggregation + per-client
+    step masking). It must be decidable at policy-construction time — the
+    runner compiles once per (strategy, beta, channel, schedule_kind).
     """
 
+    schedule_kind = "scheduled"
+    sampler = "reference"        # subclasses usually expose this as a field
+
+    def plan_schedule(self, rng, start: int, end: int, clients: int,
+                      budget: int) -> Dict[str, np.ndarray]:
+        """Schedule rows for rounds [start, end): a dict of NumPy arrays
+        ``participation`` (blk, clients) bool, ``local_steps`` (blk,
+        clients) int32, and per-round-normalized ``weights`` (blk,
+        clients) float32. ``budget`` is the strategy's full per-client
+        workload (``FedStrategy.local_step_budget``). The default is the
+        homogeneous fleet: everyone participates, full budget, uniform
+        weights — and consumes NO rng."""
+        blk = end - start
+        return {
+            "participation": np.ones((blk, clients), bool),
+            "local_steps": np.full((blk, clients), budget, np.int32),
+            "weights": np.full((blk, clients), 1.0 / clients, np.float32),
+        }
+
     def sample_block(self, task_dist, rng, rounds: int, clients: int,
-                     support: int, data_mode: str) -> Dict:
-        raise NotImplementedError
+                     support: int, data_mode: str,
+                     participation: Optional[np.ndarray] = None) -> Dict:
+        """Default data path shared by every shipped policy: dispatch to
+        the distribution's ``sampler`` flavour ("reference" replays the
+        legacy per-task RNG order; "vectorized" is the one-allocation
+        fast path), schedule-driven by the participation mask."""
+        if self.sampler == "vectorized":
+            return task_dist.sample_support_block(
+                rng, rounds, clients, support, data_mode,
+                participation=participation)
+        return task_dist.sample_support_block_reference(
+            rng, rounds, clients, support, data_mode,
+            participation=participation)
+
+    def _validate_sampler(self):
+        if self.sampler not in SAMPLERS:
+            raise ValueError(f"unknown sampler {self.sampler!r}; "
+                             f"expected one of {SAMPLERS}")
 
 
 @dataclasses.dataclass(frozen=True)
 class UniformSampling(SamplingPolicy):
     """Every round draws ``clients`` fresh tasks i.i.d. — the paper's
-    serial (C=1) and batched schema.
+    serial (C=1) and batched schema. The trivial schedule (full
+    participation, full budget, uniform weights) keeps the engine on its
+    legacy fast path: schedule_kind == "uniform" selects the unweighted
+    scan body, so runs are bit-for-bit identical to the pre-schedule
+    engine.
 
     sampler="reference" replays the legacy per-task RNG order bit-for-bit
     (seeded parity with the pre-engine loops); "vectorized" uses the
@@ -187,15 +283,81 @@ class UniformSampling(SamplingPolicy):
     """
     sampler: str = "reference"
 
-    def __post_init__(self):
-        if self.sampler not in SAMPLERS:
-            raise ValueError(f"unknown sampler {self.sampler!r}; "
-                             f"expected one of {SAMPLERS}")
+    schedule_kind = "uniform"
 
-    def sample_block(self, task_dist, rng, rounds, clients, support,
-                     data_mode):
-        if self.sampler == "vectorized":
-            return task_dist.sample_support_block(rng, rounds, clients,
-                                                  support, data_mode)
-        return task_dist.sample_support_block_reference(
-            rng, rounds, clients, support, data_mode)
+    def __post_init__(self):
+        self._validate_sampler()
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialParticipation(SamplingPolicy):
+    """TinyMetaFed-style partial participation: each round only
+    ``max(1, round(fraction * clients))`` cohort slots check in, train,
+    and pay transport; the server averages over exactly the participants
+    (weights 1/m on participants, 0 elsewhere).
+
+    Scheduled-out slots draw NO task data from the host rng under the
+    "reference" sampler (their batch slots stay zero) — the host-side
+    sampling work scales with the fraction, which is where TinyMetaFed's
+    savings come from. The "vectorized" sampler samples the full block in
+    one allocation and zeroes the scheduled-out slots afterwards.
+    """
+    fraction: float = 0.5
+    sampler: str = "reference"
+
+    def __post_init__(self):
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got "
+                             f"{self.fraction!r}")
+        self._validate_sampler()
+
+    def cohort(self, clients: int) -> int:
+        """Participants per round."""
+        return max(1, int(round(self.fraction * clients)))
+
+    def plan_schedule(self, rng, start, end, clients, budget):
+        blk, m = end - start, self.cohort(clients)
+        part = np.zeros((blk, clients), bool)
+        for r in range(blk):                 # one small choice per round
+            part[r, rng.choice(clients, size=m, replace=False)] = True
+        return {
+            "participation": part,
+            "local_steps": np.where(part, budget, 0).astype(np.int32),
+            "weights": (part.astype(np.float32) / m),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSampling(SamplingPolicy):
+    """Heterogeneous-device straggler simulation: every client shows up,
+    but each draws an i.i.d. local step budget k_i uniformly from
+    ``[ceil(min_steps_frac * budget), budget]`` (slow MCUs deliver fewer
+    local steps by the server's deadline). Aggregation is
+    arrival-weighted: w_i = k_i / sum_j k_j, so a client that completed
+    twice the local work moves the server twice as far. Everyone still
+    ships a full (fraction-scaled, if the channel is partial) payload.
+
+    The per-step masking rides the engine's existing lax.cond/validity
+    machinery (steps >= k_i are runtime no-ops inside the client scan),
+    so blocks stay fixed-shape and the runner still traces exactly once.
+    """
+    min_steps_frac: float = 0.25
+    sampler: str = "reference"
+
+    def __post_init__(self):
+        if not 0.0 < self.min_steps_frac <= 1.0:
+            raise ValueError(f"min_steps_frac must be in (0, 1], got "
+                             f"{self.min_steps_frac!r}")
+        self._validate_sampler()
+
+    def plan_schedule(self, rng, start, end, clients, budget):
+        blk = end - start
+        lo = max(1, int(np.ceil(self.min_steps_frac * budget)))
+        steps = rng.integers(lo, budget + 1,
+                             size=(blk, clients)).astype(np.int32)
+        weights = steps / steps.sum(axis=1, keepdims=True)
+        return {
+            "participation": np.ones((blk, clients), bool),
+            "local_steps": steps,
+            "weights": weights.astype(np.float32),
+        }

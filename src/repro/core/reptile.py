@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional
 
 from repro.core.engine import CommChannel, run_federated
+from repro.core.pipeline import SamplingPolicy
 from repro.core.strategies import ReptileStrategy
 from repro.data.tasks import TaskDistribution
 
@@ -26,13 +27,17 @@ def reptile_train(loss_fn: Callable, init_params,
                   eval_kwargs: Optional[dict] = None,
                   channel: Optional[CommChannel] = None,
                   prefetch: int = 2, sampler: str = "reference",
-                  max_block: int = 512) -> Dict:
+                  max_block: int = 512,
+                  sampling: Optional[SamplingPolicy] = None) -> Dict:
     """clients_per_round == 1 -> serial Reptile; > 1 -> batched Reptile
     (server averages the per-client pseudo-gradients; requires concurrent
-    connections to all sampled clients — the cost the paper calls out)."""
+    connections to all sampled clients — the cost the paper calls out).
+    `sampling` plugs in a heterogeneity schedule (partial participation /
+    stragglers over the cohort)."""
     return run_federated(
         init_params, task_dist, ReptileStrategy(loss_fn, epochs=epochs),
         rounds=rounds, clients_per_round=clients_per_round, alpha=alpha,
         beta=beta, support=support, anneal=anneal, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
-        prefetch=prefetch, sampler=sampler, max_block=max_block)
+        prefetch=prefetch, sampler=sampler, max_block=max_block,
+        sampling=sampling)

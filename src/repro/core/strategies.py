@@ -1,10 +1,10 @@
-"""Federated strategies: each core/ algorithm as two pure-JAX hooks.
+"""Federated strategies: each core/ algorithm as pure-JAX hooks.
 
 A ``FedStrategy`` tells the round engine (repro.core.engine) WHAT a
 client computes and HOW the server folds the results back; the engine
-owns everything else (sampling, scanning, metering, annealing, eval).
-Both hooks must be jax-traceable — ``client_update`` runs under
-``vmap`` across the round's clients inside a ``lax.scan`` over rounds:
+owns everything else (scheduling, scanning, metering, annealing, eval).
+All hooks must be jax-traceable — ``client_update`` runs under ``vmap``
+across the round's clients inside a ``lax.scan`` over rounds:
 
   client_update(phi, client_batch, beta) -> (result_tree, inner_losses)
       phi: broadcast parameters; client_batch: {"x","y"} with leading
@@ -12,6 +12,24 @@ Both hooks must be jax-traceable — ``client_update`` runs under
   server_aggregate(phi, client_results, alpha_t, beta) -> phi
       client_results: result_tree with a leading clients_per_round axis;
       alpha_t: the (possibly annealed) server rate for this round.
+
+Heterogeneity-scheduled runs (any ``SamplingPolicy`` whose
+``schedule_kind`` != "uniform", see repro.core.pipeline) use the
+schedule-aware variants instead:
+
+  client_update_steps(phi, client_batch, beta, k)
+      k: this client's TRACED local step budget from the round's
+      ClientSchedule, in the strategy's own units (stream samples for
+      TinyReptile, epochs for Reptile/FedAVG). The default ignores k —
+      right for one-shot workloads (FedSGD's single gradient, Transfer's
+      raw-batch forward) that have no straggler axis.
+  server_aggregate_weighted(phi, client_results, alpha_t, beta, weights)
+      weights: (clients,) per-round-normalized aggregation weights
+      (0 for non-participants) — partial participation and
+      arrival-weighted straggler aggregation both reduce to this.
+  local_step_budget(support) -> int
+      The full per-client workload in scheduler units; scheduling
+      policies draw each k_i from [1, budget].
 
 A new algorithm is one strategy object — not a new file-long loop.
 """
@@ -24,7 +42,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import meta_interpolate
-from repro.core.meta import finetune_batch, finetune_online
+from repro.core.meta import (finetune_batch, finetune_batch_masked,
+                             finetune_online, finetune_online_masked)
+
+
+def weighted_client_mean(trees, weights):
+    """sum_c weights[c] * tree_c along the leading clients axis, in fp32.
+    With per-round-normalized weights this is the participation-weighted
+    client mean (uniform weights 1/C recover the plain mean).
+
+    Zero-weight clients are truly INERT: their results are zeroed before
+    the sum, so a scheduled-out client whose hook still ran on its
+    zeroed batch (one-shot strategies ignore local_steps) cannot poison
+    the round with a NaN/inf — 0 * NaN would otherwise be NaN."""
+    def wmean(q):
+        qf = q.astype(jnp.float32)
+        w = weights.reshape((-1,) + (1,) * (qf.ndim - 1))
+        return jnp.sum(w * jnp.where(w > 0, qf, 0.0), axis=0)
+    return jax.tree.map(wmean, trees)
 
 
 def reptile_aggregate(phi, phi_hats, alpha_t, *,
@@ -35,6 +70,16 @@ def reptile_aggregate(phi, phi_hats, alpha_t, *,
     engine.meta_interpolate's."""
     mean = jax.tree.map(
         lambda q: jnp.mean(q.astype(jnp.float32), axis=0), phi_hats)
+    return meta_interpolate(phi, mean, alpha_t, use_pallas=use_pallas)
+
+
+def reptile_aggregate_weighted(phi, phi_hats, alpha_t, weights, *,
+                               use_pallas: Optional[bool] = None):
+    """Participation/arrival-weighted Reptile server update:
+    phi <- phi + alpha_t * (sum_c w_c phi_hat_c - phi). Weights are the
+    round's normalized ClientSchedule weights; zero-weight (scheduled
+    out) clients contribute nothing."""
+    mean = weighted_client_mean(phi_hats, weights)
     return meta_interpolate(phi, mean, alpha_t, use_pallas=use_pallas)
 
 
@@ -59,6 +104,27 @@ class FedStrategy:
     def server_aggregate(self, phi, client_results, alpha_t, beta):
         raise NotImplementedError
 
+    def local_step_budget(self, support: int) -> int:
+        """Full per-client workload in scheduler units. Default: one
+        unit per support sample (stream strategies); epoch-loop and
+        one-shot strategies override."""
+        return support
+
+    def client_update_steps(self, phi, client_batch, beta, k):
+        """Schedule-aware client hook: honor a traced local step budget
+        k. Default ignores k (one-shot workloads); strategies with a
+        real local loop mask steps >= k via the lax.cond machinery."""
+        del k
+        return self.client_update(phi, client_batch, beta)
+
+    def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                  beta, weights):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement weighted "
+            "aggregation; define server_aggregate_weighted to run under "
+            "scheduled sampling policies (partial participation / "
+            "stragglers)")
+
 
 @dataclasses.dataclass(frozen=True)
 class TinyReptileStrategy(FedStrategy):
@@ -74,9 +140,20 @@ class TinyReptileStrategy(FedStrategy):
         return finetune_online(self.loss_fn, phi,
                                client_batch["x"], client_batch["y"], beta)
 
+    def client_update_steps(self, phi, client_batch, beta, k):
+        """Straggler clients consume only their first k stream samples."""
+        return finetune_online_masked(self.loss_fn, phi, client_batch["x"],
+                                      client_batch["y"], beta, k)
+
     def server_aggregate(self, phi, client_results, alpha_t, beta):
         return reptile_aggregate(phi, client_results, alpha_t,
                                  use_pallas=self.use_pallas)
+
+    def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                  beta, weights):
+        return reptile_aggregate_weighted(phi, client_results, alpha_t,
+                                          weights,
+                                          use_pallas=self.use_pallas)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,9 +170,23 @@ class ReptileStrategy(FedStrategy):
         return finetune_batch(self.loss_fn, phi, client_batch,
                               self.epochs, beta)
 
+    def local_step_budget(self, support):
+        return self.epochs
+
+    def client_update_steps(self, phi, client_batch, beta, k):
+        """Straggler clients complete only their first k local epochs."""
+        return finetune_batch_masked(self.loss_fn, phi, client_batch,
+                                     self.epochs, beta, k)
+
     def server_aggregate(self, phi, client_results, alpha_t, beta):
         return reptile_aggregate(phi, client_results, alpha_t,
                                  use_pallas=self.use_pallas)
+
+    def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                  beta, weights):
+        return reptile_aggregate_weighted(phi, client_results, alpha_t,
+                                          weights,
+                                          use_pallas=self.use_pallas)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,9 +200,22 @@ class FedAvgStrategy(FedStrategy):
         return finetune_batch(self.loss_fn, phi, client_batch,
                               self.epochs, beta)
 
+    def local_step_budget(self, support):
+        return self.epochs
+
+    def client_update_steps(self, phi, client_batch, beta, k):
+        return finetune_batch_masked(self.loss_fn, phi, client_batch,
+                                     self.epochs, beta, k)
+
     def server_aggregate(self, phi, client_results, alpha_t, beta):
         n = jax.tree.leaves(client_results)[0].shape[0]
         return jax.tree.map(lambda q: q.sum(0) / n, client_results)
+
+    def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                  beta, weights):
+        """Weighted model average over the participating clients only."""
+        avg = weighted_client_mean(client_results, weights)
+        return jax.tree.map(lambda p, q: q.astype(p.dtype), phi, avg)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,10 +229,20 @@ class FedSGDStrategy(FedStrategy):
         loss, g = jax.value_and_grad(self.loss_fn)(phi, client_batch)
         return g, loss
 
+    def local_step_budget(self, support):
+        return 1                 # one gradient: no straggler axis
+
     def server_aggregate(self, phi, client_results, alpha_t, beta):
         n = jax.tree.leaves(client_results)[0].shape[0]
         return jax.tree.map(
             lambda p, g: p - beta * g.sum(0) / n, phi, client_results)
+
+    def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                  beta, weights):
+        """Apply the participation-weighted mean gradient."""
+        g = weighted_client_mean(client_results, weights)
+        return jax.tree.map(
+            lambda p, gg: (p - beta * gg).astype(p.dtype), phi, g)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,8 +257,23 @@ class TransferStrategy(FedStrategy):
     def client_update(self, phi, client_batch, beta):
         return client_batch, jnp.zeros(())
 
+    def local_step_budget(self, support):
+        return 1                 # raw-batch forward: no straggler axis
+
     def server_aggregate(self, phi, client_results, alpha_t, beta):
         pooled = jax.tree.map(
             lambda a: a.reshape(-1, *a.shape[2:]), client_results)
         g = jax.grad(self.loss_fn)(phi, pooled)
         return jax.tree.map(lambda w, gg: w - beta * gg, phi, g)
+
+    def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                  beta, weights):
+        """Per-client pool gradients, weighted — scheduled-out clients'
+        (zeroed) batches get weight 0 instead of polluting the pool.
+        Mathematically the pooled-gradient with client weights; not
+        bitwise the unweighted pool (sum order differs)."""
+        grads = jax.vmap(
+            lambda b: jax.grad(self.loss_fn)(phi, b))(client_results)
+        g = weighted_client_mean(grads, weights)
+        return jax.tree.map(
+            lambda w, gg: (w - beta * gg).astype(w.dtype), phi, g)

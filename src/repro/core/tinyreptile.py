@@ -21,6 +21,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional
 
 from repro.core.engine import CommChannel, run_federated
+from repro.core.pipeline import SamplingPolicy
 from repro.core.strategies import TinyReptileStrategy
 from repro.data.tasks import TaskDistribution
 
@@ -34,14 +35,20 @@ def tinyreptile_train(loss_fn: Callable, init_params,
                       use_pallas: Optional[bool] = None,
                       channel: Optional[CommChannel] = None,
                       prefetch: int = 2, sampler: str = "reference",
-                      max_block: int = 512) -> Dict:
-    """Returns {"params", "history", "comm_bytes"}; history rows are
-    per-eval dicts. `prefetch`/`sampler`/`max_block` tune the engine's
-    host/device pipeline (see repro.core.engine.run_federated)."""
+                      max_block: int = 512,
+                      clients_per_round: int = 1,
+                      sampling: Optional[SamplingPolicy] = None) -> Dict:
+    """Returns {"params", "history", "comm_bytes", "per_client_bytes"};
+    history rows are per-eval dicts. `prefetch`/`sampler`/`max_block`
+    tune the engine's host/device pipeline; `sampling` plugs in a
+    heterogeneity schedule (partial participation / stragglers) and
+    `clients_per_round` > 1 grows the paper's serial schema into a
+    cohort for such policies (see repro.core.engine.run_federated)."""
     return run_federated(
         init_params, task_dist,
         TinyReptileStrategy(loss_fn, use_pallas=use_pallas),
-        rounds=rounds, clients_per_round=1, alpha=alpha, beta=beta,
-        support=support, anneal=anneal, seed=seed, eval_every=eval_every,
-        eval_kwargs=eval_kwargs, channel=channel, prefetch=prefetch,
-        sampler=sampler, max_block=max_block)
+        rounds=rounds, clients_per_round=clients_per_round, alpha=alpha,
+        beta=beta, support=support, anneal=anneal, seed=seed,
+        eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
+        prefetch=prefetch, sampler=sampler, max_block=max_block,
+        sampling=sampling)

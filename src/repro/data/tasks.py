@@ -64,7 +64,8 @@ class TaskDistribution:
     def sample_support_block_reference(self, rng: np.random.Generator,
                                        rounds: int, clients: int,
                                        support: int,
-                                       data_mode: str = "batch") -> Dict:
+                                       data_mode: str = "batch",
+                                       participation=None) -> Dict:
         """Seeded-parity reference: sample ``rounds x clients`` client
         support sets with a per-task Python loop, consuming `rng` in
         exactly the order the legacy per-round loops did (for each round,
@@ -73,9 +74,19 @@ class TaskDistribution:
         Returns {"x": (rounds, clients, support, ...), "y": ...} NumPy
         arrays. Stream- and batch-mode clients draw identically here;
         the mode only matters for distributions whose two views differ.
+
+        ``participation`` (optional (rounds, clients) bool — a
+        ClientSchedule's mask) drives the sampling: scheduled-out slots
+        draw NOTHING from the rng and their block entries stay zero, so
+        host sampling work scales with the participating fraction. An
+        all-True mask consumes the rng identically to no mask.
         """
-        xs, ys = [], []
-        for _ in range(rounds * clients):
+        samples = []
+        for i in range(rounds * clients):
+            if (participation is not None
+                    and not participation[i // clients, i % clients]):
+                samples.append(None)
+                continue
             task = self.sample_task(rng)
             if data_mode == "stream":
                 sx, sy = zip(*task.support_stream(rng, support))
@@ -83,21 +94,44 @@ class TaskDistribution:
             else:
                 b = task.support_batch(rng, support)
                 x, y = np.asarray(b["x"]), np.asarray(b["y"])
-            xs.append(x)
-            ys.append(y)
-        x = np.stack(xs).reshape(rounds, clients, *xs[0].shape)
-        y = np.stack(ys).reshape(rounds, clients, *ys[0].shape)
+            samples.append((x, y))
+        template = next((s for s in samples if s is not None), None)
+        if template is None:
+            raise ValueError("participation mask schedules zero clients "
+                             "across the whole block; every round needs "
+                             "at least one participant")
+        zx, zy = np.zeros_like(template[0]), np.zeros_like(template[1])
+        xs = [zx if s is None else s[0] for s in samples]
+        ys = [zy if s is None else s[1] for s in samples]
+        x = np.stack(xs).reshape(rounds, clients, *zx.shape)
+        y = np.stack(ys).reshape(rounds, clients, *zy.shape)
         return {"x": x, "y": y}
 
     def sample_support_block(self, rng: np.random.Generator, rounds: int,
                              clients: int, support: int,
-                             data_mode: str = "batch") -> Dict:
+                             data_mode: str = "batch",
+                             participation=None) -> Dict:
         """Batched block sampling: one vectorized allocation for the whole
         block. Subclasses override with true vectorized implementations
         (block RNG order, see module docstring); the base class falls back
-        to the reference loop so every distribution supports the API."""
+        to the reference loop so every distribution supports the API.
+
+        Vectorized overrides sample the FULL block in one allocation and
+        zero the scheduled-out ``participation`` slots afterwards (the
+        reference loop instead skips their rng draws entirely)."""
         return self.sample_support_block_reference(rng, rounds, clients,
-                                                   support, data_mode)
+                                                   support, data_mode,
+                                                   participation)
+
+    @staticmethod
+    def _mask_block(block: Dict, participation) -> Dict:
+        """Zero the scheduled-out (round, client) slots of a sampled
+        block in place (vectorized overrides' participation contract)."""
+        if participation is not None:
+            off = ~np.asarray(participation, bool)
+            for v in block.values():
+                v[off] = 0
+        return block
 
 
 class SineTasks(TaskDistribution):
@@ -121,13 +155,14 @@ class SineTasks(TaskDistribution):
                           task_id=int(rng.integers(1 << 31)))
 
     def sample_support_block(self, rng, rounds, clients, support,
-                             data_mode="batch"):
+                             data_mode="batch", participation=None):
         """Vectorized block: (1) all task parameter triples (a, b, c) as
         one (n, 3) uniform draw (row-major — the same values a scalar
         per-task a/b/c loop would draw), then (2) all support inputs as
         one (n, support, 1) draw. Per-sample math is identical to
         ``make_sample``, so a scalar loop over this block order
-        reproduces it bit-for-bit (tested)."""
+        reproduces it bit-for-bit (tested). Scheduled-out
+        ``participation`` slots are zeroed after the full-block draw."""
         del data_mode  # the stream and batch views share one layout
         n = rounds * clients
         abc = rng.uniform([0.1, 0.8, 0.0], [5.0, 1.2, np.pi], size=(n, 3))
@@ -135,8 +170,9 @@ class SineTasks(TaskDistribution):
         lo, hi = self.x_range
         x = rng.uniform(lo, hi, size=(n, support, 1)).astype(np.float32)
         y = (a * np.sin(b * x + c)).astype(np.float32)
-        return {"x": x.reshape(rounds, clients, support, 1),
-                "y": y.reshape(rounds, clients, support, 1)}
+        return self._mask_block(
+            {"x": x.reshape(rounds, clients, support, 1),
+             "y": y.reshape(rounds, clients, support, 1)}, participation)
 
 
 def _glyph_prototype(class_id: int, side: int = 28) -> np.ndarray:
@@ -191,11 +227,12 @@ class OmniglotTasks(TaskDistribution):
                           task_id=int(rng.integers(1 << 31)))
 
     def sample_support_block(self, rng, rounds, clients, support,
-                             data_mode="batch"):
+                             data_mode="batch", participation=None):
         """Vectorized block. RNG order: per-task class subsets first (the
         only remaining per-task loop — ``choice`` without replacement),
         then labels, roll offsets, and noise each as one array draw. The
-        per-sample roll is a wrapped gather instead of ``np.roll``."""
+        per-sample roll is a wrapped gather instead of ``np.roll``.
+        Scheduled-out ``participation`` slots are zeroed post-draw."""
         del data_mode
         n, side = rounds * clients, 28
         classes = np.stack([rng.choice(self.num_classes, size=self.ways,
@@ -215,8 +252,10 @@ class OmniglotTasks(TaskDistribution):
         rolled = imgs[np.arange(n)[:, None, None, None],
                       np.arange(support)[None, :, None, None], r_idx, c_idx]
         x = (rolled + noise)[..., None].astype(np.float32)
-        return {"x": x.reshape(rounds, clients, support, side, side, 1),
-                "y": labels.astype(np.int32).reshape(rounds, clients, support)}
+        return self._mask_block(
+            {"x": x.reshape(rounds, clients, support, side, side, 1),
+             "y": labels.astype(np.int32).reshape(rounds, clients, support)},
+            participation)
 
 
 def _kws_prototype(class_id: int, t: int = 49, f: int = 10) -> np.ndarray:
@@ -267,10 +306,11 @@ class KWSTasks(TaskDistribution):
                           task_id=int(rng.integers(1 << 31)))
 
     def sample_support_block(self, rng, rounds, clients, support,
-                             data_mode="batch"):
+                             data_mode="batch", participation=None):
         """Vectorized block. RNG order: per-task keyword subsets first,
         then labels, time shifts, amplitudes, and noise each as one array
-        draw; the time roll is a wrapped gather along the frame axis."""
+        draw; the time roll is a wrapped gather along the frame axis.
+        Scheduled-out ``participation`` slots are zeroed post-draw."""
         del data_mode
         n, t, f = rounds * clients, 49, 10
         words = np.stack([rng.choice(self.num_words, size=self.ways,
@@ -289,5 +329,7 @@ class KWSTasks(TaskDistribution):
                       np.arange(support)[None, :, None], r_idx]
         x = (rolled * amps[..., None, None] + noise)
         x = x[..., None].astype(np.float32)
-        return {"x": x.reshape(rounds, clients, support, t, f, 1),
-                "y": labels.astype(np.int32).reshape(rounds, clients, support)}
+        return self._mask_block(
+            {"x": x.reshape(rounds, clients, support, t, f, 1),
+             "y": labels.astype(np.int32).reshape(rounds, clients, support)},
+            participation)

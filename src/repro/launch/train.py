@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import ALL_ARCHS, get_arch
-from repro.core.pipeline import single_device_of
+from repro.core.engine import CommChannel
+from repro.core.pipeline import PartialParticipation, single_device_of
 from repro.data import LMClientStream
 from repro.models import build_model
 from repro.optim.schedules import linear_anneal
@@ -40,6 +41,11 @@ def main():
     ap.add_argument("--beta", type=float, default=0.02)
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of the client fleet that checks in "
+                         "each round (a PartialParticipation schedule "
+                         "over the pool); each round's training client "
+                         "is drawn among that round's participants")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -64,6 +70,22 @@ def main():
     alpha_sched = linear_anneal(args.alpha, args.rounds, floor=args.alpha * 0.1)
     rng = np.random.default_rng(args.seed)
 
+    # device-availability schedule: with --participation < 1 only a
+    # fleet subset checks in each round; the round's client is drawn
+    # among the participants (the engine's ClientSchedule planning,
+    # reused at launcher scale). Transport is billed per round at the
+    # paper's fp32 accounting.
+    checkin = None
+    if not 0.0 < args.participation <= 1.0:
+        raise SystemExit(f"--participation must be in (0, 1], got "
+                         f"{args.participation}")
+    if args.participation < 1.0:
+        checkin = PartialParticipation(args.participation).plan_schedule(
+            rng, start_round, args.rounds, args.clients,
+            args.k_inner)["participation"]
+    channel = CommChannel()
+    round_bill = 2 * channel.payload_bytes(phi)     # downlink + uplink
+
     step = jax.jit(make_meta_train_step(model, beta=args.beta,
                                         alpha=args.alpha),
                    donate_argnums=(0,))
@@ -75,7 +97,11 @@ def main():
         # draws exactly the synchronous sequence while batch building +
         # device staging for round N+1 hide behind the step on round N.
         rnd = start_round + i
-        client = clients[int(rng.integers(len(clients)))]
+        if checkin is None:
+            client = clients[int(rng.integers(len(clients)))]
+        else:
+            avail = np.flatnonzero(checkin[i])
+            client = clients[int(avail[rng.integers(len(avail))])]
         raw = client.batch(rng, args.batch, args.seq)
         batch = {}
         if cfg.frontend == "vision":
@@ -95,12 +121,16 @@ def main():
     for rnd, zipf_a, alpha_t, batch in staged:
         t0 = time.time()
         phi, metrics = step(phi, batch, jnp.float32(alpha_t))
+        # derived from the ABSOLUTE round so resumed runs keep billing
+        # the full trajectory, not just the post-restore tail
+        comm_bytes = (rnd + 1) * round_bill
         print(json.dumps({
             "round": rnd, "client": zipf_a,
             "loss": float(metrics["loss"]),
             "inner_first": float(metrics["inner_first"]),
             "inner_last": float(metrics["inner_last"]),
-            "alpha": alpha_t, "dt_s": round(time.time() - t0, 3)}),
+            "alpha": alpha_t, "comm_mb": round(comm_bytes / 2**20, 2),
+            "dt_s": round(time.time() - t0, 3)}),
             flush=True)
         if args.ckpt_dir and (rnd + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, phi, rnd + 1,

@@ -258,6 +258,40 @@ def test_transfer_parity(setup):
     _assert_parity(got, want, check_comm=False)
 
 
+def test_schedule_threaded_engine_is_bitwise_uniform(setup):
+    """PR-3 acceptance: with UniformSampling (full participation,
+    uniform local steps) the schedule-threaded engine must be bit-for-bit
+    the PR-2 engine for all five strategies. The legacy-loop parity
+    tests above pin the numerics to the seed; this pins the explicit
+    schedule object to the default path — the ClientSchedule arrays ride
+    the scan but the uniform body must not touch them."""
+    from repro.core import UniformSampling
+    params, dist = setup
+    cases = [
+        (tinyreptile_train, dict(rounds=15, alpha=1.0, beta=0.02,
+                                 support=6, seed=21)),
+        (reptile_train, dict(rounds=10, alpha=1.0, beta=0.02, support=6,
+                             epochs=3, clients_per_round=3, seed=22)),
+        (fedavg_train, dict(rounds=8, beta=0.02, support=6, epochs=3,
+                            clients_per_round=3, seed=23)),
+        (fedsgd_train, dict(rounds=10, beta=0.02, support=6,
+                            clients_per_round=3, seed=24)),
+        (transfer_train, dict(rounds=10, beta=0.02, batch_per_round=12,
+                              tasks_per_round=3, seed=25)),
+    ]
+    for train_fn, kw in cases:
+        default = train_fn(LOSS, params, dist, **kw)
+        threaded = train_fn(LOSS, params, dist,
+                            sampling=UniformSampling(), **kw)
+        for a, b in zip(jax.tree.leaves(default["params"]),
+                        jax.tree.leaves(threaded["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if "comm_bytes" in default:
+            assert default["comm_bytes"] == threaded["comm_bytes"]
+            assert default["per_client_bytes"] == \
+                threaded["per_client_bytes"]
+
+
 def test_engine_does_not_clobber_init_params(setup):
     """The engine donates its working buffers; the caller's init_params
     must survive (they are reused across algorithm runs in benches)."""

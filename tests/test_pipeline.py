@@ -219,6 +219,31 @@ def test_vectorized_sampler_trains(setup):
                for l in jax.tree.leaves(out["params"]))
 
 
+def test_client_schedule_is_a_pytree():
+    """ClientSchedule device-stages through the prefetcher and slices
+    through lax.scan like any other block input."""
+    from repro.core import ClientSchedule
+    sched = ClientSchedule(
+        valid=np.array([True, False]),
+        alpha=np.array([1.0, 0.5], np.float32),
+        round_index=np.array([0, 1], np.int32),
+        participation=np.ones((2, 3), bool),
+        local_steps=np.full((2, 3), 4, np.int32),
+        weights=np.full((2, 3), 1 / 3, np.float32))
+    staged = jax.device_put(sched)
+    assert isinstance(staged, ClientSchedule)
+    rows = []
+
+    def body(carry, s):
+        rows.append(s)
+        return carry, s.round_index
+
+    _, idx = jax.lax.scan(body, 0, staged)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1])
+    assert rows[0].participation.shape == (3,)     # per-round row slices
+    assert rows[0].valid.shape == ()
+
+
 # ---------------------------------------------------------------------------
 # the prefetcher itself
 # ---------------------------------------------------------------------------
