@@ -3,14 +3,25 @@ federated meta-learning of a 4-way keyword classifier across a simulated
 heterogeneous IoT fleet, with the paper's resource accounting.
 
 This is the end-to-end driver of the paper's kind, upgraded to the
-engine's deployment-scenario plugins: the cohort runs through
+engine's deployment-scenario plugins. By default the cohort runs through
 ``run_federated`` with a ``PartialParticipation`` schedule — each round
 only half the fleet checks in, trains, and pays transport — and the run
 reports the per-client transport bill (paper Table-II style: bytes per
 device, not just a fleet total) next to the Table-II memory model.
 
+With ``--pool-size`` / ``--availability`` / ``--buffer-size`` the fleet
+becomes a PERSISTENT ``ClientPool``: every device keeps its own keyword
+task and data stream across check-ins (the TinyReptile deployment
+model), check-ins follow a diurnal sine or two-state Markov process, and
+aggregation optionally goes FedBuff-style async (a server buffer that
+flushes every K arrivals with staleness-discounted weights). The run
+then prints each device's check-in count, staleness, and transport bill.
+
   PYTHONPATH=src python examples/federated_keyword_spotting.py
+  PYTHONPATH=src python examples/federated_keyword_spotting.py \\
+      --availability diurnal --buffer-size 4
 """
+import argparse
 import functools
 import time
 
@@ -18,8 +29,10 @@ import jax
 import numpy as np
 
 from repro.configs.paper_models import KWS_CONV
-from repro.core import (CommChannel, PartialParticipation, evaluate_init,
-                        run_federated, tinyreptile_train)
+from repro.core import (BufferedAggregation, ClientPool, CommChannel,
+                        DiurnalAvailability, MarkovAvailability,
+                        PartialParticipation, evaluate_init, run_federated,
+                        tinyreptile_train)
 from repro.core.strategies import TinyReptileStrategy
 from repro.data import KWSTasks
 from repro.metering import algorithm_memory_report
@@ -31,12 +44,65 @@ ACC = functools.partial(paper_model_accuracy, KWS_CONV)
 EVAL = dict(num_tasks=8, support=16, k_steps=8, lr=0.01, query=32,
             metric_fn=ACC)
 
-ROUNDS = 200
 COHORT = 8          # fleet slots per round
-FRACTION = 0.5      # half the fleet checks in each round
+FRACTION = 0.5      # half the fleet checks in each round (default mode)
+
+
+def positive_int(s):
+    v = int(s)
+    if v < 1:
+        raise argparse.ArgumentTypeError(f"must be >= 1, got {v}")
+    return v
+
+
+def parse_args():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=positive_int, default=200)
+    ap.add_argument("--pool-size", type=positive_int, default=None,
+                    help="run on a persistent ClientPool of this many "
+                         "devices (default 16 when --availability or "
+                         "--buffer-size imply a pool)")
+    ap.add_argument("--availability", default="none",
+                    choices=("none", "diurnal", "markov"),
+                    help="check-in process over the pool: diurnal sine "
+                         "or two-state Markov (implies a pool)")
+    ap.add_argument("--buffer-size", type=positive_int, default=None,
+                    help="FedBuff-style async aggregation: flush the "
+                         "server buffer every K arrivals (implies a pool)")
+    return ap.parse_args()
+
+
+def transport_table(out, params, rounds, label, staleness=None):
+    """Paper Table-II style per-device bill (+ pooled identity state)."""
+    round_bill = 2 * CommChannel().payload_bytes(params)  # down + up
+    print(f"\ntransport accounting over {rounds} rounds "
+          f"(fp32 wire, downlink + uplink, "
+          f"{round_bill / 1024:.1f} KB per participated round):")
+    header = f"  {'client':>8}  {'rounds':>7}  {'KB paid':>9}"
+    if staleness is not None:
+        header += f"  {'staleness':>10}  {'last seen':>10}"
+    print(header)
+    for c, paid in enumerate(out["per_client_bytes"]):
+        row = f"  {c:>8}  {paid // round_bill:>7}  {paid / 1024:>9.1f}"
+        if staleness is not None:
+            row += (f"  {staleness['staleness'][c]:>10d}"
+                    f"  {staleness['last_seen'][c]:>10d}")
+        print(row)
+    total = out["comm_bytes"]
+    full = rounds * COHORT * round_bill
+    print(f"  {'total':>8}  {total // round_bill:>7}  {total / 1024:>9.1f}"
+          f"   ({total / full:.0%} of a full-participation fleet)  "
+          f"[{label}]")
 
 
 def main():
+    args = parse_args()
+    pooled = (args.pool_size is not None or args.availability != "none"
+              or args.buffer_size is not None)
+    pool_size = args.pool_size or 16
+    if pooled and pool_size < COHORT:
+        raise SystemExit(f"--pool-size must seat the {COHORT}-slot cohort")
+
     params = init_paper_model(KWS_CONV, jax.random.PRNGKey(0))
     print(f"model: {KWS_CONV.name}, params = {param_count(params)}")
     dist = KWSTasks()
@@ -52,8 +118,9 @@ def main():
 
     # --- serial TinyReptile (the paper's Algorithm 1 schema) ------------
     t0 = time.time()
-    tiny = tinyreptile_train(LOSS, params, dist, rounds=ROUNDS, alpha=1.0,
-                             beta=0.01, support=16, eval_every=100,
+    tiny = tinyreptile_train(LOSS, params, dist, rounds=args.rounds,
+                             alpha=1.0, beta=0.01, support=16,
+                             eval_every=max(args.rounds // 2, 1),
                              eval_kwargs=EVAL, seed=1)
     t_tiny = time.time() - t0
     for ev in tiny["history"]:
@@ -63,14 +130,47 @@ def main():
           f"{tiny['history'][-1]['query_metric']:.2%} ({t_tiny:.1f}s, "
           f"{tiny['comm_bytes']/1024:.0f} KB total transport)")
 
-    # --- partial-participation fleet through the round engine -----------
+    # --- the fleet through the round engine -----------------------------
+    if pooled:
+        pool = ClientPool(dist, pool_size, seed=1)
+        policy = {"none": None,
+                  "diurnal": DiurnalAvailability(period=24),
+                  "markov": MarkovAvailability()}[args.availability]
+        buffered = (BufferedAggregation(args.buffer_size)
+                    if args.buffer_size else None)
+        label = (f"pool of {pool_size}, {args.availability} check-ins"
+                 + (f", FedBuff K={args.buffer_size}" if buffered else ""))
+        print(f"\npersistent fleet: {label}")
+        t0 = time.time()
+        fleet = run_federated(params, dist, TinyReptileStrategy(LOSS),
+                              rounds=args.rounds, clients_per_round=COHORT,
+                              alpha=1.0, beta=0.01, support=16, seed=1,
+                              eval_every=max(args.rounds // 2, 1),
+                              eval_kwargs=EVAL, sampling=policy,
+                              pool=pool, buffered=buffered)
+        t_fleet = time.time() - t0
+        for ev in fleet["history"]:
+            print(f"  fleet round {ev['round']:4d}: "
+                  f"acc {ev['query_metric']:.2%}  "
+                  f"loss {ev['query_loss']:.3f}")
+        ps = fleet["pool_state"]
+        idle = int((ps["checkins"] == 0).sum())
+        print(f"persistent fleet final acc: "
+              f"{fleet['history'][-1]['query_metric']:.2%} ({t_fleet:.1f}s; "
+              f"{idle}/{pool_size} devices never checked in"
+              + (f"; {ps['flushes']} buffer flushes, "
+                 f"{ps['buffered_pending']} updates still pending"
+                 if buffered else "") + ")")
+        transport_table(fleet, params, args.rounds, label, staleness=ps)
+        return
+
     policy = PartialParticipation(FRACTION)
     t0 = time.time()
     fleet = run_federated(params, dist, TinyReptileStrategy(LOSS),
-                          rounds=ROUNDS, clients_per_round=COHORT,
+                          rounds=args.rounds, clients_per_round=COHORT,
                           alpha=1.0, beta=0.01, support=16, seed=1,
-                          eval_every=100, eval_kwargs=EVAL,
-                          sampling=policy)
+                          eval_every=max(args.rounds // 2, 1),
+                          eval_kwargs=EVAL, sampling=policy)
     t_fleet = time.time() - t0
     for ev in fleet["history"]:
         print(f"  fleet round {ev['round']:4d}: "
@@ -78,20 +178,8 @@ def main():
     print(f"partial-participation fleet ({COHORT} slots, "
           f"{policy.cohort(COHORT)}/round check in) final acc: "
           f"{fleet['history'][-1]['query_metric']:.2%} ({t_fleet:.1f}s)")
-
-    # --- per-client transport accounting (paper Table-II style) ---------
-    round_bill = 2 * CommChannel().payload_bytes(params)  # down + up
-    print(f"\ntransport accounting over {ROUNDS} rounds "
-          f"(fp32 wire, downlink + uplink, "
-          f"{round_bill / 1024:.1f} KB per participated round):")
-    print(f"  {'client':>8}  {'rounds':>7}  {'KB paid':>9}")
-    for c, paid in enumerate(fleet["per_client_bytes"]):
-        print(f"  {c:>8}  {paid // round_bill:>7}  {paid / 1024:>9.1f}")
-    total = fleet["comm_bytes"]
-    full = ROUNDS * COHORT * round_bill
-    print(f"  {'total':>8}  {ROUNDS * policy.cohort(COHORT):>7}  "
-          f"{total / 1024:>9.1f}   "
-          f"({total / full:.0%} of a full-participation fleet)")
+    transport_table(fleet, params, args.rounds,
+                    f"anonymous cohort, {FRACTION:.0%} participation")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,11 @@ Architecture (post engine refactor):
                    heterogeneity layer: pluggable ``SamplingPolicy``
                    schedule producers (uniform, partial participation,
                    stragglers).
+  pool.py        — persistent client identities: ``ClientPool`` (stable
+                   per-device tasks + a cross-round on-device state
+                   pytree), FedBuff-style ``BufferedAggregation``, and
+                   diurnal / Markov ``AvailabilityProcess`` check-in
+                   schedules.
   strategies.py  — ``FedStrategy`` objects: each algorithm reduced to
                    ``client_update`` + ``server_aggregate`` hooks (plus
                    schedule-aware weighted/step-masked variants).
@@ -39,6 +44,9 @@ from repro.core.pipeline import (BlockPrefetcher, ClientSchedule,  # noqa: F401
                                  PartialParticipation, SamplingPolicy,
                                  StragglerSampling, UniformSampling,
                                  plan_blocks)
+from repro.core.pool import (AvailabilityProcess, BufferedAggregation,  # noqa: F401
+                             ClientPool, DiurnalAvailability,
+                             MarkovAvailability, PoolState)
 from repro.core.meta import evaluate_init, finetune_batch, finetune_online  # noqa: F401
 from repro.core.reptile import reptile_train  # noqa: F401
 from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,  # noqa: F401

@@ -39,6 +39,15 @@ dispatch per client per round. This module owns all of that once:
   uplink deltas plus fraction-scaled accounting, billed per
   participating client, with optional per-round rotating masks that
   cover every parameter entry once per ``ceil(1/fraction)`` rounds.
+* Persistent identities are one layer up: a ``repro.core.pool.
+  ClientPool`` gives every client a stable task/data shard and a
+  cross-round state pytree (last-seen round, staleness counters, the
+  FedBuff pending-update buffer) that rides the scan carry next to phi
+  and is gathered/scattered by the round's cohort indices inside the
+  scan. ``BufferedAggregation`` makes aggregation FedBuff-style async
+  (flush every K arrivals, staleness-discounted weights);
+  ``DiurnalAvailability`` / ``MarkovAvailability`` drive who checks in.
+  ``pool=None`` keeps the legacy anonymous-cohort path bit-for-bit.
 * The server update routes through the fused Pallas kernel
   (``repro.kernels.ops.meta_update``) by default on TPU backends;
   elsewhere the same fp32 math runs as plain XLA (the kernel would only
@@ -67,6 +76,7 @@ from repro.core.meta import evaluate_init
 from repro.core.pipeline import (ClientSchedule, SamplingPolicy,
                                  UniformSampling, plan_blocks,
                                  prefetch_items, single_device_of)
+from repro.core.pool import BufferedAggregation, ClientPool, PoolState
 from repro.data.tasks import TaskDistribution
 
 logger = logging.getLogger(__name__)
@@ -393,14 +403,25 @@ class _BlockRunner:
     mask inside the scan body (``chunk_ids == round % period``); the
     expensive per-leaf permutations happen once per block, outside it.
 
+    Pooled runs (``pooled=True``) scan the carry ``(phi, PoolState)``
+    instead: the round body gathers the cohort's per-client state rows
+    by the schedule's cohort indices, runs the scheduled client phase,
+    aggregates (immediately, or into the FedBuff buffer when
+    ``buffered`` is set — the buffer flushes through
+    ``server_aggregate_weighted`` with staleness-discounted weights
+    every ``buffer_size`` arrivals), and scatters the updated rows back
+    — all inside the scan, so persistent identities and async
+    aggregation still cost ZERO per-round host dispatches.
+
     ``trace_count`` increments once per jit trace; with the engine's
     fixed per-run block shape it stays at 1 per (strategy, beta,
-    channel, schedule-shape) config — the retrace-free contract's
-    observable.
+    channel, schedule-shape, pool-shape) config — the retrace-free
+    contract's observable.
     """
 
     def __init__(self, strategy, beta, channel: CommChannel,
-                 scheduled: bool = False):
+                 scheduled: bool = False, pooled: bool = False,
+                 buffered: Optional[BufferedAggregation] = None):
         self.trace_count = 0
         beta_f = jnp.float32(beta)
         simulate = channel.simulates_quantization
@@ -409,53 +430,60 @@ class _BlockRunner:
         partial = getattr(channel, "fraction", 1.0) < 1.0
         rotating = partial and bool(getattr(channel, "rotate", False))
 
+        def client_phase(phi, sched, batch, masks, chunk_ids):
+            """Downlink -> vmapped client hook -> uplink: the wire-and-
+            compute half of a round, shared by every scan body."""
+            m = masks
+            if chunk_ids is not None:
+                m = channel.masks_for_round(chunk_ids, sched.round_index)
+            phi_down = (channel.transmit(phi, masks=m)
+                        if simulate else phi)
+            if scheduled:
+                results, losses = jax.vmap(
+                    lambda b, k: strategy.client_update_steps(
+                        phi_down, b, beta_f, k))(batch, sched.local_steps)
+            else:
+                results, losses = jax.vmap(
+                    lambda b: strategy.client_update(phi_down, b,
+                                                     beta_f))(batch)
+            if simulate:
+                # the uplink fallback is the SERVER's own state
+                # (phi, pre-wire), not the quantized broadcast
+                # the clients saw
+                ref = None
+                if needs_ref and uplink_ref == "params":
+                    ref = phi
+                elif needs_ref and uplink_ref == "zeros":
+                    ref = jax.tree.map(jnp.zeros_like, phi)
+                results = channel.transmit(
+                    results, ref=ref,
+                    masks=m if ref is not None else None)
+            return results, losses
+
+        def weighted_round_loss(losses, sched):
+            k = jnp.maximum(sched.local_steps, 1).astype(jnp.float32)
+            per_client = losses.reshape(
+                (losses.shape[0], -1)).sum(axis=1) / k
+            # zero-weight clients are inert here too: their loss on a
+            # zeroed batch may be non-finite and 0 * NaN would poison
+            # the round loss (same guard as
+            # strategies.weighted_client_mean)
+            return jnp.sum(sched.weights * jnp.where(
+                sched.weights > 0, per_client, 0.0))
+
         def make_round_fn(masks, chunk_ids):
             def round_fn(phi, xs):
                 sched, batch = xs    # sched: one ClientSchedule row;
                 #                      batch leaves: (C, S, ...)
 
                 def live(phi):
-                    m = masks
-                    if chunk_ids is not None:
-                        m = channel.masks_for_round(chunk_ids,
-                                                    sched.round_index)
-                    phi_down = (channel.transmit(phi, masks=m)
-                                if simulate else phi)
-                    if scheduled:
-                        results, losses = jax.vmap(
-                            lambda b, k: strategy.client_update_steps(
-                                phi_down, b, beta_f, k))(
-                            batch, sched.local_steps)
-                    else:
-                        results, losses = jax.vmap(
-                            lambda b: strategy.client_update(phi_down, b,
-                                                             beta_f))(batch)
-                    if simulate:
-                        # the uplink fallback is the SERVER's own state
-                        # (phi, pre-wire), not the quantized broadcast
-                        # the clients saw
-                        ref = None
-                        if needs_ref and uplink_ref == "params":
-                            ref = phi
-                        elif needs_ref and uplink_ref == "zeros":
-                            ref = jax.tree.map(jnp.zeros_like, phi)
-                        results = channel.transmit(
-                            results, ref=ref,
-                            masks=m if ref is not None else None)
+                    results, losses = client_phase(phi, sched, batch,
+                                                   masks, chunk_ids)
                     if scheduled:
                         phi = strategy.server_aggregate_weighted(
                             phi, results, sched.alpha, beta_f,
                             sched.weights)
-                        k = jnp.maximum(sched.local_steps,
-                                        1).astype(jnp.float32)
-                        per_client = losses.reshape(
-                            (losses.shape[0], -1)).sum(axis=1) / k
-                        # zero-weight clients are inert here too: their
-                        # loss on a zeroed batch may be non-finite and
-                        # 0 * NaN would poison the round loss (same
-                        # guard as strategies.weighted_client_mean)
-                        loss = jnp.sum(sched.weights * jnp.where(
-                            sched.weights > 0, per_client, 0.0))
+                        loss = weighted_round_loss(losses, sched)
                     else:
                         phi = strategy.server_aggregate(phi, results,
                                                         sched.alpha, beta_f)
@@ -468,8 +496,83 @@ class _BlockRunner:
                 return jax.lax.cond(sched.valid, live, dead, phi)
             return round_fn
 
-        def run_block(phi, sched, batch):
-            self.trace_count += 1                 # runs at trace time only
+        def make_pooled_round_fn(masks, chunk_ids):
+            def round_fn(carry, xs):
+                sched, batch = xs
+
+                def live(carry):
+                    phi, ps = carry
+                    results, losses = client_phase(phi, sched, batch,
+                                                   masks, chunk_ids)
+                    if buffered is None:
+                        phi = strategy.server_aggregate_weighted(
+                            phi, results, sched.alpha, beta_f,
+                            sched.weights)
+                        buf, buf_round = ps.buf_updates, ps.buf_round
+                        count, flushes = ps.buf_count, ps.flushes
+                    else:
+                        # append this round's arrivals at the buffer's
+                        # write positions (a prefix-sum compaction of the
+                        # participation mask); non-participants scatter
+                        # to an out-of-range slot and are dropped
+                        cap = ps.buf_round.shape[0]
+                        arrive = sched.participation.astype(jnp.int32)
+                        slot = jnp.where(
+                            sched.participation,
+                            ps.buf_count + jnp.cumsum(arrive) - 1, cap)
+                        buf = jax.tree.map(
+                            lambda b, q: b.at[slot].set(
+                                q.astype(b.dtype), mode="drop"),
+                            ps.buf_updates, results)
+                        buf_round = ps.buf_round.at[slot].set(
+                            sched.round_index, mode="drop")
+                        count = ps.buf_count + arrive.sum()
+
+                        def flush(args):
+                            phi, buf, buf_round, count, flushes = args
+                            tau = (sched.round_index
+                                   - buf_round).astype(jnp.float32)
+                            w = (buffered.staleness_fn(tau)
+                                 * (jnp.arange(cap) < count))
+                            w = (w / jnp.maximum(w.sum(), 1e-8)
+                                 ).astype(jnp.float32)
+                            phi = strategy.server_aggregate_weighted(
+                                phi, buf, sched.alpha, beta_f, w)
+                            return phi, jnp.int32(0), flushes + 1
+
+                        def hold(args):
+                            phi, buf, buf_round, count, flushes = args
+                            return phi, count, flushes
+
+                        phi, count, flushes = jax.lax.cond(
+                            count >= buffered.buffer_size, flush, hold,
+                            (phi, buf, buf_round, count, ps.flushes))
+
+                    # scatter the cohort's identity-state rows back:
+                    # non-participants route to the out-of-range index
+                    # n and are dropped; cohort indices are unique per
+                    # round, so set/add never collide
+                    n = ps.last_seen.shape[0]
+                    idx = jnp.where(sched.participation, sched.cohort, n)
+                    gap = (sched.round_index
+                           - ps.last_seen[sched.cohort]).astype(jnp.int32)
+                    ps = PoolState(
+                        last_seen=ps.last_seen.at[idx].set(
+                            sched.round_index, mode="drop"),
+                        staleness=ps.staleness.at[idx].set(
+                            gap, mode="drop"),
+                        checkins=ps.checkins.at[idx].add(1, mode="drop"),
+                        buf_updates=buf, buf_round=buf_round,
+                        buf_count=count, flushes=flushes)
+                    return (phi, ps), weighted_round_loss(losses, sched)
+
+                def dead(carry):
+                    return carry, jnp.float32(0.0)
+
+                return jax.lax.cond(sched.valid, live, dead, carry)
+            return round_fn
+
+        def mask_state(phi):
             # the partial-channel mask state is constant for the whole
             # run: build it here, OUTSIDE the scan body, so the per-leaf
             # permutations execute once per block instead of every round
@@ -479,34 +582,54 @@ class _BlockRunner:
                      if simulate and partial and not rotating else None)
             chunk_ids = (channel.chunk_id_tree(phi)
                          if simulate and rotating else None)
-            return jax.lax.scan(make_round_fn(masks, chunk_ids), phi,
-                                (sched, batch))
+            return masks, chunk_ids
 
-        self._jit = jax.jit(run_block, donate_argnums=(0,))
+        if pooled:
+            def run_block(phi, pool_state, sched, batch):
+                self.trace_count += 1             # runs at trace time only
+                masks, chunk_ids = mask_state(phi)
+                (phi, pool_state), losses = jax.lax.scan(
+                    make_pooled_round_fn(masks, chunk_ids),
+                    (phi, pool_state), (sched, batch))
+                return phi, pool_state, losses
 
-    def __call__(self, phi, sched, batch):
-        return self._jit(phi, sched, batch)
+            self._jit = jax.jit(run_block, donate_argnums=(0, 1))
+        else:
+            def run_block(phi, sched, batch):
+                self.trace_count += 1             # runs at trace time only
+                masks, chunk_ids = mask_state(phi)
+                return jax.lax.scan(make_round_fn(masks, chunk_ids), phi,
+                                    (sched, batch))
+
+            self._jit = jax.jit(run_block, donate_argnums=(0,))
+
+    def __call__(self, *args):
+        return self._jit(*args)
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_block_runner(strategy, beta, channel, scheduled) -> _BlockRunner:
-    return _BlockRunner(strategy, beta, channel, scheduled)
+def _cached_block_runner(strategy, beta, channel, scheduled, pooled,
+                         buffered) -> _BlockRunner:
+    return _BlockRunner(strategy, beta, channel, scheduled, pooled,
+                        buffered)
 
 
 _UNHASHABLE_MISSES = {"count": 0}
 
 
 def _block_runner(strategy, beta, channel: CommChannel,
-                  scheduled: bool = False) -> _BlockRunner:
+                  scheduled: bool = False, pooled: bool = False,
+                  buffered: Optional[BufferedAggregation] = None
+                  ) -> _BlockRunner:
     """Strategies and channels are frozen dataclasses, so identically-
     configured runs (every test/bench re-entry) reuse one jitted runner
     instead of recompiling per call; ``scheduled`` (the policy's static
-    schedule shape) is part of the key. Unhashable custom strategies
-    still work — they pay a fresh trace per run, counted and logged so
-    sweeps notice."""
+    schedule shape), ``pooled``, and the ``buffered`` config are part of
+    the key. Unhashable custom strategies still work — they pay a fresh
+    trace per run, counted and logged so sweeps notice."""
     try:
         return _cached_block_runner(strategy, float(beta), channel,
-                                    bool(scheduled))
+                                    bool(scheduled), bool(pooled), buffered)
     except TypeError:
         _UNHASHABLE_MISSES["count"] += 1
         logger.warning(
@@ -515,7 +638,8 @@ def _block_runner(strategy, beta, channel: CommChannel,
             "per run). Make custom strategies frozen dataclasses to cache "
             "them.", _UNHASHABLE_MISSES["count"],
             type(strategy).__name__, type(channel).__name__)
-        return _BlockRunner(strategy, beta, channel, scheduled)
+        return _BlockRunner(strategy, beta, channel, scheduled, pooled,
+                            buffered)
 
 
 def runner_cache_stats() -> Dict[str, int]:
@@ -543,7 +667,9 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   channel: Optional[CommChannel] = None,
                   max_block: int = 512, prefetch: int = 2,
                   sampler: str = "reference",
-                  sampling: Optional[SamplingPolicy] = None) -> Dict:
+                  sampling: Optional[SamplingPolicy] = None,
+                  pool: Optional[ClientPool] = None,
+                  buffered: Optional[BufferedAggregation] = None) -> Dict:
     """Run `rounds` federated rounds of `strategy`.
 
     Returns {"params", "history"} (+ "comm_bytes" and "per_client_bytes"
@@ -556,17 +682,31 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     Rounds between evals execute as fixed-shape on-device scan blocks
     (padded to one per-run length, masked, `max_block`-bounded — see
     repro.core.pipeline.plan_blocks), so the block runner compiles once
-    per (strategy, beta, channel, schedule-shape) config. The host only
-    plans the per-round ClientSchedule and samples client data
-    (`sampling` policy; `sampler` picks the legacy-exact "reference" RNG
-    order or the "vectorized" fast path for the default uniform policy)
-    and runs the eval protocol — heterogeneous scenarios (partial
-    participation, stragglers, rotating partial-comm masks) ride the
-    schedule through the scan with no extra per-round host dispatches.
-    With `prefetch` > 0 a background thread plans, samples, and stages
-    block N+1 while the device runs block N (double-buffered at the
-    default 2); `prefetch=0` is the synchronous escape hatch — both are
-    bit-for-bit identical.
+    per (strategy, beta, channel, schedule-shape, pool-shape) config.
+    The host only plans the per-round ClientSchedule and samples client
+    data (`sampling` policy; `sampler` picks the legacy-exact
+    "reference" RNG order or the "vectorized" fast path for the default
+    uniform policy) and runs the eval protocol — heterogeneous scenarios
+    (partial participation, stragglers, rotating partial-comm masks)
+    ride the schedule through the scan with no extra per-round host
+    dispatches. With `prefetch` > 0 a background thread plans, samples,
+    and stages block N+1 while the device runs block N (double-buffered
+    at the default 2); `prefetch=0` is the synchronous escape hatch —
+    both are bit-for-bit identical.
+
+    `pool` switches the run onto PERSISTENT client identities (a
+    repro.core.pool.ClientPool over `task_dist`): each round the policy
+    seats a cohort of pool clients (`plan_pool_schedule`), their stable
+    per-client data shards feed the round, and the pool's cross-round
+    state (last-seen round, staleness, check-in counts) updates inside
+    the scan. `buffered` (requires `pool`) turns aggregation
+    FedBuff-style async: check-ins append to a server buffer that
+    flushes every `buffer_size` arrivals with staleness-discounted
+    weights. Pooled metered runs bill per POOL CLIENT
+    (per_client_bytes has pool.size entries) and return a "pool_state"
+    dict (last_seen / staleness / checkins arrays [+ flushes,
+    buffered_pending]); `pool=None` keeps the legacy anonymous-cohort
+    path bit-for-bit.
     """
     if channel is None:
         channel = CommChannel()
@@ -580,16 +720,36 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             f"pass the sampler on the sampling policy (e.g. "
             f"{type(sampling).__name__}(..., sampler={sampler!r})), not "
             f"as run_federated(sampler=...) alongside sampling=")
+    pooled = pool is not None
+    if buffered is not None:
+        if not pooled:
+            raise ValueError("buffered aggregation needs persistent "
+                             "clients to be stale against: pass "
+                             "pool=ClientPool(...) alongside buffered=")
+        if getattr(strategy, "uplink_ref", "params") == "none":
+            raise ValueError(
+                f"{type(strategy).__name__} uplinks raw data "
+                f"(uplink_ref='none'); the FedBuff buffer holds "
+                f"phi-shaped updates and cannot stage it")
+    if pooled and pool.size < clients_per_round:
+        raise ValueError(f"pool of {pool.size} clients cannot seat a "
+                         f"cohort of {clients_per_round} (identities are "
+                         f"unique within a round)")
     rng = np.random.default_rng(seed)
     # private copy: the block runner donates its phi argument, and the
     # caller's init_params must stay usable (they are reused across runs)
     phi = jax.tree.map(jnp.array, init_params)
     history: List[Dict] = []
     comm_bytes = 0
-    per_client_bytes = np.zeros(clients_per_round, np.int64)
-    scheduled = getattr(sampling, "schedule_kind", "scheduled") != "uniform"
+    per_client_bytes = np.zeros(pool.size if pooled else clients_per_round,
+                                np.int64)
+    scheduled = (pooled or
+                 getattr(sampling, "schedule_kind", "scheduled") != "uniform")
     budget = int(strategy.local_step_budget(support))
-    run_block = _block_runner(strategy, beta, channel, scheduled)
+    run_block = _block_runner(strategy, beta, channel, scheduled,
+                              pooled=pooled, buffered=buffered)
+    pool_state = (pool.init_state(phi, clients_per_round, buffered)
+                  if pooled else None)
     blocks, pad = plan_blocks(rounds, eval_every, max_block)
     device = single_device_of(phi)       # staging target for the prefetcher
     if strategy.meters_comm:
@@ -605,21 +765,34 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         """Plan the schedule, sample, pad, and device-stage block i.
         Called strictly in block order (inline, or from the single
         prefetch thread), so the host RNG stream is
-        prefetch-schedule-independent: plan_schedule draws first, then
-        sample_block, every block."""
+        prefetch-schedule-independent: plan_schedule (or its pooled
+        variant) draws first, then the data sampling, every block."""
         start, end = blocks[i]
         blk = end - start
-        plan = sampling.plan_schedule(rng, start, end, clients_per_round,
-                                      budget)
-        part = np.asarray(plan["participation"], bool)
-        batch = sampling.sample_block(task_dist, rng, blk, clients_per_round,
-                                      support, strategy.data_mode,
-                                      participation=part)
+        if pooled:
+            plan = sampling.plan_pool_schedule(rng, start, end,
+                                               clients_per_round, budget,
+                                               pool.size)
+            part = np.asarray(plan["participation"], bool)
+            cohort = np.asarray(plan["cohort"], np.int32)
+            batch = pool.sample_cohort_block(cohort, part, support,
+                                             strategy.data_mode)
+        else:
+            plan = sampling.plan_schedule(rng, start, end,
+                                          clients_per_round, budget)
+            part = np.asarray(plan["participation"], bool)
+            cohort = None
+            batch = sampling.sample_block(task_dist, rng, blk,
+                                          clients_per_round, support,
+                                          strategy.data_mode,
+                                          participation=part)
         r = np.arange(start, end)
         alphas = np.zeros(pad, np.float32)
         alphas[:blk] = alpha * (1 - r / rounds) if anneal else alpha
         valid = np.zeros(pad, bool)
-        valid[:blk] = True
+        # pooled rounds where nobody checked in (an availability trough)
+        # are runtime no-ops, same as the padding mask
+        valid[:blk] = part.any(axis=1) if pooled else True
         round_index = np.zeros(pad, np.int32)
         round_index[:blk] = r
 
@@ -632,26 +805,37 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             valid=valid, alpha=alphas, round_index=round_index,
             participation=pad_rows(part, bool),
             local_steps=pad_rows(plan["local_steps"], np.int32),
-            weights=pad_rows(plan["weights"], np.float32))
+            weights=pad_rows(plan["weights"], np.float32),
+            cohort=pad_rows(cohort, np.int32) if pooled else None)
         if blk < pad:
             batch = {k: np.concatenate(
                 [np.asarray(v),
                  np.zeros((pad - blk,) + np.asarray(v).shape[1:],
                           np.asarray(v).dtype)]) for k, v in batch.items()}
-        return part, jax.device_put((sched, batch), device)
+        return part, cohort, jax.device_put((sched, batch), device)
 
     staged_iter = prefetch_items(stage, len(blocks), depth=prefetch)
     try:
-        for (start, end), (part, staged) in zip(blocks, staged_iter):
+        for (start, end), (part, cohort, staged) in zip(blocks, staged_iter):
             sched_d, batch_d = staged
-            phi, round_losses = run_block(phi, sched_d, batch_d)
+            if pooled:
+                phi, pool_state, round_losses = run_block(
+                    phi, pool_state, sched_d, batch_d)
+            else:
+                phi, round_losses = run_block(phi, sched_d, batch_d)
             blk = end - start
             if strategy.meters_comm:
                 # bill downlink + uplink per participating client, at the
                 # round's exact (possibly rotating) payload
                 payloads = payload_by_phase[
                     np.arange(start, end) % len(payload_by_phase)]
-                per_client_bytes += (2 * payloads[:, None] * part).sum(0)
+                if pooled:
+                    # bill the POOL CLIENT seated in each participating
+                    # slot (np.add.at accumulates repeat check-ins)
+                    bills = 2 * payloads[:, None] * part
+                    np.add.at(per_client_bytes, cohort[part], bills[part])
+                else:
+                    per_client_bytes += (2 * payloads[:, None] * part).sum(0)
                 comm_bytes += int((2 * payloads * part.sum(axis=1)).sum())
             if eval_every and end % eval_every == 0:
                 ev = evaluate_init(strategy.loss_fn, phi, task_dist,
@@ -670,4 +854,12 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     if strategy.meters_comm:
         out["comm_bytes"] = comm_bytes
         out["per_client_bytes"] = [int(b) for b in per_client_bytes]
+    if pooled:
+        ps = jax.device_get(pool_state)
+        out["pool_state"] = {"last_seen": np.asarray(ps.last_seen),
+                             "staleness": np.asarray(ps.staleness),
+                             "checkins": np.asarray(ps.checkins)}
+        if buffered is not None:
+            out["pool_state"]["flushes"] = int(ps.flushes)
+            out["pool_state"]["buffered_pending"] = int(ps.buf_count)
     return out

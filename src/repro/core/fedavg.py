@@ -12,6 +12,7 @@ from typing import Callable, Dict, Optional
 
 from repro.core.engine import CommChannel, run_federated
 from repro.core.pipeline import SamplingPolicy
+from repro.core.pool import BufferedAggregation, ClientPool
 from repro.core.strategies import FedAvgStrategy, FedSGDStrategy
 from repro.data.tasks import TaskDistribution
 
@@ -25,7 +26,9 @@ def fedavg_train(loss_fn: Callable, init_params,
                  channel: Optional[CommChannel] = None,
                  prefetch: int = 2, sampler: str = "reference",
                  max_block: int = 512,
-                 sampling: Optional[SamplingPolicy] = None) -> Dict:
+                 sampling: Optional[SamplingPolicy] = None,
+                 pool: Optional[ClientPool] = None,
+                 buffered: Optional[BufferedAggregation] = None) -> Dict:
     """FedAVG: clients run E local epochs; server averages the MODELS
     (participation-weighted under a heterogeneity `sampling` policy)."""
     return run_federated(
@@ -34,7 +37,7 @@ def fedavg_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling)
+        sampling=sampling, pool=pool, buffered=buffered)
 
 
 def fedsgd_train(loss_fn: Callable, init_params,
@@ -46,7 +49,9 @@ def fedsgd_train(loss_fn: Callable, init_params,
                  channel: Optional[CommChannel] = None,
                  prefetch: int = 2, sampler: str = "reference",
                  max_block: int = 512,
-                 sampling: Optional[SamplingPolicy] = None) -> Dict:
+                 sampling: Optional[SamplingPolicy] = None,
+                 pool: Optional[ClientPool] = None,
+                 buffered: Optional[BufferedAggregation] = None) -> Dict:
     """FedSGD: each client sends ONE gradient; server applies the mean
     (participation-weighted under a heterogeneity `sampling` policy)."""
     return run_federated(
@@ -55,4 +60,4 @@ def fedsgd_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling)
+        sampling=sampling, pool=pool, buffered=buffered)

@@ -29,7 +29,11 @@ now also owns the engine's per-round, per-client ROUND STATE:
   everyone shows up, same step count, uniform weights) keeps the
   engine's legacy bit-for-bit fast path; ``PartialParticipation`` and
   ``StragglerSampling`` are the deployment-scenario plugins — a new
-  scenario is a policy object, not a sixth training loop.
+  scenario is a policy object, not a sixth training loop. Pooled runs
+  (a persistent ``repro.core.pool.ClientPool``) additionally plan a
+  per-round ``cohort`` of pool indices via ``plan_pool_schedule``;
+  availability processes (diurnal / Markov check-ins) live in
+  repro.core.pool and override that hook.
 """
 from __future__ import annotations
 
@@ -180,17 +184,31 @@ class ClientSchedule:
 
     One instance describes a whole padded block; ``lax.scan`` slices the
     leading (padded rounds) axis so each scan step sees one round's row.
+    It is a registered pytree: it device-stages through the prefetcher
+    and scans like any other block input, which is what keeps
+    heterogeneous rounds at ZERO per-round host dispatches.
 
-    valid:          (R,)    bool — False on padded rounds (runtime no-op).
+    valid:          (R,)    bool — False on padded rounds AND on pooled
+                    rounds where no client checked in (both are runtime
+                    no-ops: ``lax.cond`` passes the carry through).
     alpha:          (R,)    f32  — annealed server rate for the round.
     round_index:    (R,)    i32  — ABSOLUTE round number; rotating
-                    partial-comm masks fold it into their mask key.
+                    partial-comm masks fold it into their mask key, and
+                    pooled runs use it to stamp ``PoolState.last_seen``
+                    and the FedBuff buffer's staleness tags.
     participation:  (R, C)  bool — which cohort slots train (and pay
                     transport) this round.
     local_steps:    (R, C)  i32  — per-client local step budget k_i, in
                     the strategy's own units (stream samples / epochs).
     weights:        (R, C)  f32  — aggregation weights, normalized per
                     round (0 for non-participants).
+    cohort:         (R, C)  i32 or None — WHICH persistent pool client
+                    occupies each cohort slot this round (indices into a
+                    ``repro.core.pool.ClientPool``; unique per round).
+                    The block runner gathers/scatters the pool's
+                    cross-round state by these indices inside the scan.
+                    None on legacy (pool-free) runs, where cohort slots
+                    are anonymous and resampled every round.
     """
     valid: object
     alpha: object
@@ -198,9 +216,10 @@ class ClientSchedule:
     participation: object
     local_steps: object
     weights: object
+    cohort: object = None
 
     _FIELDS = ("valid", "alpha", "round_index", "participation",
-               "local_steps", "weights")
+               "local_steps", "weights", "cohort")
 
 
 jax.tree_util.register_pytree_node(
@@ -245,6 +264,34 @@ class SamplingPolicy:
             "local_steps": np.full((blk, clients), budget, np.int32),
             "weights": np.full((blk, clients), 1.0 / clients, np.float32),
         }
+
+    def plan_pool_schedule(self, rng, start: int, end: int, clients: int,
+                           budget: int,
+                           pool_size: int) -> Dict[str, np.ndarray]:
+        """Pooled-run schedule: ``plan_schedule``'s rows plus a
+        ``cohort`` array ((blk, clients) int32) naming WHICH of the
+        ``pool_size`` persistent clients occupies each cohort slot that
+        round (indices must be unique within a round — the engine
+        scatters per-client state by them). The default seats a uniform
+        without-replacement draw each round, then delegates the
+        heterogeneity rows to ``plan_schedule`` — so every existing
+        policy (uniform, partial participation, stragglers) composes
+        with a pool unchanged. RNG order: cohort draws first, then the
+        ``plan_schedule`` draws; deterministic, block-ordered (the
+        prefetch-parity contract). Availability processes
+        (repro.core.pool) override this wholesale: who is in the cohort
+        IS the schedule there."""
+        blk = end - start
+        if pool_size < clients:
+            raise ValueError(f"pool_size={pool_size} is smaller than the "
+                             f"cohort ({clients} slots): persistent "
+                             f"clients cannot repeat within a round")
+        cohort = np.stack([rng.choice(pool_size, size=clients, replace=False)
+                           for _ in range(blk)]) if blk else \
+            np.zeros((0, clients), np.int64)
+        plan = self.plan_schedule(rng, start, end, clients, budget)
+        plan["cohort"] = cohort.astype(np.int32)
+        return plan
 
     def sample_block(self, task_dist, rng, rounds: int, clients: int,
                      support: int, data_mode: str,

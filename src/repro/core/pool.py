@@ -1,0 +1,395 @@
+"""Persistent client identities: the ClientPool layer.
+
+TinyReptile's serial protocol assumes each device KEEPS its data and
+state across check-ins, but the engine historically resampled anonymous
+cohort slots every round. This module makes the population first-class:
+
+- ``ClientPool``: N persistent clients. Client ``i``'s task is
+  materialized ONCE from ``(seed, i)`` (``TaskDistribution.
+  materialize_client`` — the stable per-device data shard TinyMetaFed
+  measures its savings against), and each client owns a private data
+  RNG stream advanced only at its own check-ins, so what client ``i``
+  sees depends only on how often IT has checked in — not on who else
+  was scheduled.
+- ``PoolState``: the cross-round per-client state pytree (last-seen
+  round, staleness counters, check-in counts, and the FedBuff pending
+  update buffer). It lives on device, rides the block runner's scan
+  carry next to phi, and is gathered/scattered by the round's cohort
+  indices INSIDE the scan — zero per-round host dispatches, one jit
+  trace per (strategy, beta, channel, schedule-shape, pool-shape)
+  config.
+- ``BufferedAggregation``: FedBuff-style async aggregation
+  [Nguyen et al. 2022]. Check-ins append their (possibly stale) updates
+  to a server-side buffer; the buffer flushes every ``buffer_size``
+  arrivals through the strategy's existing ``server_aggregate_weighted``
+  hook with staleness-discounted weights (default 1/sqrt(1+tau), the
+  FedBuff polynomial discount).
+- ``AvailabilityProcess`` policies: check-in schedules beyond i.i.d. —
+  ``DiurnalAvailability`` (fleet-wide sine: devices sleep at night) and
+  ``MarkovAvailability`` (two-state sticky on/off chains per client).
+  Rounds where NOBODY checks in are valid=False scan no-ops: the server
+  idles, nobody trains, nobody pays transport.
+
+``UniformSampling`` with ``pool=None`` keeps the engine's legacy
+bit-for-bit fast path (pinned in tests/test_pool.py): the pool layer is
+strictly additive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import SamplingPolicy
+from repro.data.tasks import TaskDistribution
+
+#: stream-key constants: keep a pool's task seeds, per-client data
+#: streams, and shape probes on disjoint rng streams.
+_DATA_STREAM = 0x5EED
+_PROBE_STREAM = 0x9
+
+
+def default_staleness_weight(tau):
+    """FedBuff's polynomial staleness discount: s(tau) = 1/sqrt(1+tau).
+    ``tau`` is a traced f32 array of "rounds since this update was
+    computed" at flush time; fresh updates weigh 1, a 3-round-stale
+    update half that."""
+    return 1.0 / jnp.sqrt(1.0 + tau)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolState:
+    """Cross-round per-client state, on device, scanned next to phi.
+
+    The first three fields are per-POOL-CLIENT arrays (length N = pool
+    size), gathered/scattered by the round's ``ClientSchedule.cohort``
+    indices inside the block-runner scan; the last four are the
+    server-side FedBuff buffer (None on unbuffered runs).
+
+    last_seen:   (N,) i32 — absolute round of the client's most recent
+                 check-in; -1 for clients that never checked in.
+    staleness:   (N,) i32 — the gap (in rounds) between the client's two
+                 most recent check-ins, stamped AT check-in: a client
+                 seen at rounds 3 and 7 carries staleness 4. First
+                 check-ins count from round -1 (pool creation). This is
+                 the per-device staleness the paper's serial protocol
+                 implies and the example prints per client.
+    checkins:    (N,) i32 — total rounds the client participated in.
+    buf_updates: result-shaped tree, each leaf with a leading
+                 (buffer_size + cohort - 1,) capacity axis — the pending
+                 (not yet applied) client updates. None when unbuffered.
+    buf_round:   (capacity,) i32 — the absolute round each buffered
+                 update was computed at (its staleness tag). None when
+                 unbuffered.
+    buf_count:   () i32 — arrivals since the last flush (valid buffer
+                 prefix length). None when unbuffered.
+    flushes:     () i32 — how many times the buffer flushed into phi.
+                 None when unbuffered.
+    """
+    last_seen: object
+    staleness: object
+    checkins: object
+    buf_updates: object = None
+    buf_round: object = None
+    buf_count: object = None
+    flushes: object = None
+
+    _FIELDS = ("last_seen", "staleness", "checkins", "buf_updates",
+               "buf_round", "buf_count", "flushes")
+
+
+jax.tree_util.register_pytree_node(
+    PoolState,
+    lambda s: (tuple(getattr(s, f) for f in PoolState._FIELDS), None),
+    lambda _, children: PoolState(*children))
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferedAggregation:
+    """FedBuff-style buffered async aggregation [Nguyen et al. 2022].
+
+    Instead of folding each round's cohort into phi immediately, every
+    check-in APPENDS its update to a server-side buffer; once
+    ``buffer_size`` updates have arrived the whole buffer flushes
+    through the strategy's ``server_aggregate_weighted`` hook in one
+    step, weighted by ``staleness_fn(tau)`` (tau = flush round minus the
+    round each update was computed at) and normalized. Between flushes
+    phi does not move — buffered updates are genuinely stale when
+    applied, which is exactly the async-fleet regime FedBuff models.
+
+    Arrivals land at round granularity: a round that pushes the count to
+    ``buffer_size`` or beyond flushes the ENTIRE buffer (up to
+    buffer_size + cohort - 1 updates), so the capacity is static and the
+    flush is a single ``lax.cond`` inside the scan — no host round-trip.
+
+    buffer_size:  flush threshold K, in client arrivals (>= 1).
+    staleness_fn: traced discount tau -> weight; default FedBuff's
+                  1/sqrt(1+tau). Must be a hashable callable (module
+                  function or frozen partial) for the runner cache.
+    """
+    buffer_size: int = 4
+    staleness_fn: Callable = default_staleness_weight
+
+    def __post_init__(self):
+        if not (isinstance(self.buffer_size, int) and self.buffer_size >= 1):
+            raise ValueError(f"buffer_size must be an int >= 1, got "
+                             f"{self.buffer_size!r}")
+
+
+class ClientPool:
+    """A population of ``size`` persistent clients over a task
+    distribution.
+
+    Host side (this class): each client's STABLE task is materialized
+    lazily from ``(seed, i)`` via ``task_dist.materialize_client``; each
+    client owns a private data rng advanced only at its own check-ins,
+    so its sample sequence is a function of its check-in count alone.
+    ``sample_cohort_block`` draws a block of cohort data in strict block
+    order (the prefetch thread's determinism contract).
+
+    Device side: ``init_state`` builds the :class:`PoolState` pytree the
+    engine threads through the block-runner scan.
+    """
+
+    def __init__(self, task_dist: TaskDistribution, size: int,
+                 seed: int = 0):
+        if size < 1:
+            raise ValueError(f"pool size must be >= 1, got {size!r}")
+        self.task_dist = task_dist
+        self.size = int(size)
+        self.seed = int(seed)
+        self._tasks: Dict[int, object] = {}
+        self._rngs: Dict[int, np.random.Generator] = {}
+        self._templates: Dict[tuple, tuple] = {}
+
+    def __repr__(self):
+        return (f"ClientPool({type(self.task_dist).__name__}, "
+                f"size={self.size}, seed={self.seed})")
+
+    def client_task(self, i: int):
+        """Pool client ``i``'s stable task (materialized once, cached)."""
+        if not 0 <= i < self.size:
+            raise IndexError(f"client {i} out of range for pool of "
+                             f"{self.size}")
+        if i not in self._tasks:
+            self._tasks[i] = self.task_dist.materialize_client(
+                i, seed=self.seed)
+        return self._tasks[i]
+
+    def _client_rng(self, i: int) -> np.random.Generator:
+        if i not in self._rngs:
+            self._rngs[i] = np.random.default_rng(
+                [self.seed, _DATA_STREAM, i])
+        return self._rngs[i]
+
+    def _template(self, support: int, data_mode: str):
+        """Zero-cost shape probe: one throwaway draw from client 0's
+        task on a DEDICATED rng stream (never touches the per-client
+        data streams), cached per (support, data_mode)."""
+        key = (support, data_mode)
+        if key not in self._templates:
+            rng = np.random.default_rng([self.seed, _PROBE_STREAM])
+            x, y = self._draw(self.client_task(0), rng, support, data_mode)
+            self._templates[key] = (np.zeros_like(x), np.zeros_like(y))
+        return self._templates[key]
+
+    @staticmethod
+    def _draw(task, rng, support: int, data_mode: str):
+        if data_mode == "stream":
+            sx, sy = zip(*task.support_stream(rng, support))
+            return np.stack(sx), np.stack(sy)
+        b = task.support_batch(rng, support)
+        return np.asarray(b["x"]), np.asarray(b["y"])
+
+    def sample_cohort_block(self, cohort, participation, support: int,
+                            data_mode: str = "batch") -> Dict:
+        """Support data for a planned block: for every participating
+        (round, slot), draw ``support`` samples from THAT pool client's
+        stable task using ITS private rng stream. Scheduled-out slots
+        (and whole no-show rounds) stay zero. Called strictly in block
+        order, so a client's data stream advances once per check-in —
+        deterministic regardless of prefetch depth or who else was
+        scheduled."""
+        cohort = np.asarray(cohort)
+        part = np.asarray(participation, bool)
+        rounds, clients = part.shape
+        zx, zy = self._template(support, data_mode)
+        x = np.zeros((rounds, clients) + zx.shape, zx.dtype)
+        y = np.zeros((rounds, clients) + zy.shape, zy.dtype)
+        for r in range(rounds):
+            for c in range(clients):
+                if not part[r, c]:
+                    continue
+                m = int(cohort[r, c])
+                x[r, c], y[r, c] = self._draw(
+                    self.client_task(m), self._client_rng(m), support,
+                    data_mode)
+        return {"x": x, "y": y}
+
+    def init_state(self, phi, cohort_size: int,
+                   buffered: Optional[BufferedAggregation] = None
+                   ) -> PoolState:
+        """Fresh device-resident pool state. The FedBuff buffer's static
+        capacity is ``buffer_size + cohort_size - 1``: a flush triggers
+        at count >= buffer_size, and at most cohort_size arrivals land
+        per round on top of a count of at most buffer_size - 1."""
+        n = self.size
+        last_seen = jnp.full((n,), -1, jnp.int32)
+        staleness = jnp.zeros((n,), jnp.int32)
+        checkins = jnp.zeros((n,), jnp.int32)
+        if buffered is None:
+            return PoolState(last_seen, staleness, checkins)
+        cap = buffered.buffer_size + cohort_size - 1
+        buf = jax.tree.map(
+            lambda p: jnp.zeros((cap,) + p.shape, p.dtype), phi)
+        return PoolState(last_seen, staleness, checkins, buf,
+                         jnp.zeros((cap,), jnp.int32), jnp.int32(0),
+                         jnp.int32(0))
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityProcess(SamplingPolicy):
+    """Base class for check-in processes over a persistent pool: who is
+    AVAILABLE each round is a stochastic process over the N pool
+    clients, and the round's cohort is whoever showed up (capped at the
+    cohort width by a uniform thinning draw).
+
+    Subclasses implement :meth:`availability` — a (blk, N) boolean
+    matrix for rounds [start, end), consuming ``rng`` deterministically
+    in block order (the prefetch-parity contract; the engine always
+    calls contiguous blocks in order, starting at round 0).
+
+    Rounds where nobody checks in plan an all-False participation row;
+    the engine marks them valid=False, so the server idles that round
+    (phi and pool state pass through, zero transport billed) — the
+    fixed-shape scan never retraces. These policies only make sense
+    over a pool: ``plan_schedule`` (the anonymous-cohort hook) raises.
+    """
+    sampler: str = "reference"
+
+    schedule_kind = "scheduled"
+
+    def availability(self, rng, start: int, end: int,
+                     pool_size: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def plan_schedule(self, rng, start, end, clients, budget):
+        raise ValueError(
+            f"{type(self).__name__} schedules PERSISTENT clients; pass "
+            f"pool=ClientPool(...) to run_federated (anonymous cohort "
+            f"slots have no identity to be available or not)")
+
+    def plan_pool_schedule(self, rng, start, end, clients, budget,
+                           pool_size):
+        avail = np.asarray(
+            self.availability(rng, start, end, pool_size), bool)
+        blk = end - start
+        assert avail.shape == (blk, pool_size)
+        cohort = np.zeros((blk, clients), np.int32)
+        part = np.zeros((blk, clients), bool)
+        for r in range(blk):
+            idx = np.flatnonzero(avail[r])
+            if len(idx) > clients:      # more volunteers than slots
+                idx = np.sort(rng.choice(idx, size=clients, replace=False))
+            m = len(idx)
+            cohort[r, :m] = idx
+            part[r, :m] = True
+        m_per_round = part.sum(axis=1, keepdims=True)
+        weights = np.where(
+            m_per_round > 0, part / np.maximum(m_per_round, 1), 0.0)
+        return {
+            "participation": part,
+            "local_steps": np.where(part, budget, 0).astype(np.int32),
+            "weights": weights.astype(np.float32),
+            "cohort": cohort,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalAvailability(AvailabilityProcess):
+    """Fleet-wide diurnal check-ins: client ``i`` is available at round
+    ``r`` with probability
+    ``clip(base + amplitude * sin(2*pi*(r/period + phase_i)), 0, 1)``.
+
+    With the default ``phase_spread=0`` the whole fleet shares one sine
+    (everyone's devices sleep at night — the classic diurnal load
+    curve, including trough rounds where NOBODY may check in);
+    ``phase_spread=1`` staggers phases evenly across clients (a fleet
+    spanning all timezones, whose aggregate availability is flat).
+    """
+    period: int = 24
+    base: float = 0.5
+    amplitude: float = 0.45
+    phase_spread: float = 0.0
+
+    def __post_init__(self):
+        if self.period < 1:
+            raise ValueError(f"period must be >= 1, got {self.period!r}")
+        self._validate_sampler()
+
+    def availability(self, rng, start, end, pool_size):
+        r = np.arange(start, end, dtype=np.float64)[:, None]
+        phase = (self.phase_spread
+                 * np.arange(pool_size, dtype=np.float64)[None, :]
+                 / max(pool_size, 1))
+        p = np.clip(self.base + self.amplitude
+                    * np.sin(2.0 * np.pi * (r / self.period + phase)),
+                    0.0, 1.0)
+        return rng.uniform(size=p.shape) < p
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovAvailability(AvailabilityProcess):
+    """Two-state (on/off) Markov check-ins per client: an off client
+    turns on with probability ``p_on`` each round, an on client turns
+    off with ``p_off`` — sticky sessions and dropouts rather than
+    i.i.d. coin flips. Long-run availability is the chain's stationary
+    rate ``p_on / (p_on + p_off)``; chains start from a stationary draw
+    at round 0.
+
+    The chain state must survive across scan blocks: the policy stashes
+    the ONE in-flight trajectory (keyed by the rng stream driving it,
+    held strongly so the key can never be a recycled object) and
+    requires contiguous in-order blocks — exactly how the engine's
+    prefetch producer calls it. A fresh run starts at round 0, which
+    resets the stash, so one policy instance serves any number of
+    sequential runs without growing state.
+    """
+    p_on: float = 0.3
+    p_off: float = 0.15
+    #: single-slot chain stash: (rng, pool_size, next_start, state)
+    _chain: list = dataclasses.field(default_factory=list, repr=False,
+                                     compare=False)
+
+    def __post_init__(self):
+        for name in ("p_on", "p_off"):
+            v = getattr(self, name)
+            if not 0.0 < v <= 1.0:
+                raise ValueError(f"{name} must be in (0, 1], got {v!r}")
+        self._validate_sampler()
+
+    def availability(self, rng, start, end, pool_size):
+        if start == 0:
+            self._chain.clear()          # a fresh trajectory begins
+            state = rng.uniform(size=pool_size) < (
+                self.p_on / (self.p_on + self.p_off))
+        elif (self._chain and self._chain[0] is rng
+                and self._chain[1] == pool_size
+                and self._chain[2] == start):
+            state = self._chain[3]
+        else:
+            raise RuntimeError(
+                f"MarkovAvailability needs contiguous in-order blocks "
+                f"from one rng stream: got start={start} with no "
+                f"matching chain state (blocks must begin at round 0 "
+                f"and follow back-to-back)")
+        rows = np.zeros((end - start, pool_size), bool)
+        for r in range(end - start):
+            u = rng.uniform(size=pool_size)
+            state = np.where(state, u >= self.p_off, u < self.p_on)
+            rows[r] = state
+        self._chain[:] = [rng, pool_size, end, state.copy()]
+        return rows

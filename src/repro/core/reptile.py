@@ -14,6 +14,7 @@ from typing import Callable, Dict, Optional
 
 from repro.core.engine import CommChannel, run_federated
 from repro.core.pipeline import SamplingPolicy
+from repro.core.pool import BufferedAggregation, ClientPool
 from repro.core.strategies import ReptileStrategy
 from repro.data.tasks import TaskDistribution
 
@@ -28,7 +29,9 @@ def reptile_train(loss_fn: Callable, init_params,
                   channel: Optional[CommChannel] = None,
                   prefetch: int = 2, sampler: str = "reference",
                   max_block: int = 512,
-                  sampling: Optional[SamplingPolicy] = None) -> Dict:
+                  sampling: Optional[SamplingPolicy] = None,
+                  pool: Optional[ClientPool] = None,
+                  buffered: Optional[BufferedAggregation] = None) -> Dict:
     """clients_per_round == 1 -> serial Reptile; > 1 -> batched Reptile
     (server averages the per-client pseudo-gradients; requires concurrent
     connections to all sampled clients — the cost the paper calls out).
@@ -40,4 +43,4 @@ def reptile_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=anneal, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling)
+        sampling=sampling, pool=pool, buffered=buffered)

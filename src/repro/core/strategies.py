@@ -25,8 +25,11 @@ schedule-aware variants instead:
       raw-batch forward) that have no straggler axis.
   server_aggregate_weighted(phi, client_results, alpha_t, beta, weights)
       weights: (clients,) per-round-normalized aggregation weights
-      (0 for non-participants) — partial participation and
-      arrival-weighted straggler aggregation both reduce to this.
+      (0 for non-participants) — partial participation, arrival-weighted
+      straggler aggregation, AND FedBuff-style buffered flushes
+      (repro.core.pool.BufferedAggregation: the buffered updates arrive
+      with a leading buffer-capacity axis and staleness-discounted
+      weights, zeros on empty slots) all reduce to this one hook.
   local_step_budget(support) -> int
       The full per-client workload in scheduler units; scheduling
       policies draw each k_i from [1, budget].

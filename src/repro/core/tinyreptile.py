@@ -22,6 +22,7 @@ from typing import Callable, Dict, Optional
 
 from repro.core.engine import CommChannel, run_federated
 from repro.core.pipeline import SamplingPolicy
+from repro.core.pool import BufferedAggregation, ClientPool
 from repro.core.strategies import TinyReptileStrategy
 from repro.data.tasks import TaskDistribution
 
@@ -37,7 +38,9 @@ def tinyreptile_train(loss_fn: Callable, init_params,
                       prefetch: int = 2, sampler: str = "reference",
                       max_block: int = 512,
                       clients_per_round: int = 1,
-                      sampling: Optional[SamplingPolicy] = None) -> Dict:
+                      sampling: Optional[SamplingPolicy] = None,
+                      pool: Optional[ClientPool] = None,
+                      buffered: Optional[BufferedAggregation] = None) -> Dict:
     """Returns {"params", "history", "comm_bytes", "per_client_bytes"};
     history rows are per-eval dicts. `prefetch`/`sampler`/`max_block`
     tune the engine's host/device pipeline; `sampling` plugs in a
@@ -51,4 +54,4 @@ def tinyreptile_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=anneal, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling)
+        sampling=sampling, pool=pool, buffered=buffered)

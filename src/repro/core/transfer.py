@@ -11,6 +11,7 @@ from typing import Callable, Dict, Optional
 
 from repro.core.engine import run_federated
 from repro.core.pipeline import SamplingPolicy
+from repro.core.pool import ClientPool
 from repro.core.strategies import TransferStrategy
 from repro.data.tasks import TaskDistribution
 
@@ -23,11 +24,12 @@ def transfer_train(loss_fn: Callable, init_params,
                    eval_kwargs: Optional[dict] = None,
                    prefetch: int = 2, sampler: str = "reference",
                    max_block: int = 512,
-                   sampling: Optional[SamplingPolicy] = None) -> Dict:
+                   sampling: Optional[SamplingPolicy] = None,
+                   pool: Optional[ClientPool] = None) -> Dict:
     per_task = max(batch_per_round // tasks_per_round, 1)
     return run_federated(
         init_params, task_dist, TransferStrategy(loss_fn),
         rounds=rounds, clients_per_round=tasks_per_round, alpha=0.0,
         beta=beta, support=per_task, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, prefetch=prefetch,
-        sampler=sampler, max_block=max_block, sampling=sampling)
+        sampler=sampler, max_block=max_block, sampling=sampling, pool=pool)

@@ -61,6 +61,20 @@ class TaskDistribution:
     def sample_task(self, rng: np.random.Generator) -> ClientTask:
         raise NotImplementedError
 
+    def materialize_client(self, i: int, seed: int = 0) -> ClientTask:
+        """Persistent-identity hook (repro.core.pool.ClientPool): the
+        STABLE task of pool client ``i``.
+
+        Unlike ``sample_task`` (fresh anonymous task per cohort slot per
+        round), this derives the task from ``(seed, i)`` alone, so pool
+        client ``i`` owns the same task/data shard every round, every
+        block, every run — the TinyReptile deployment model, where each
+        device keeps its own data across check-ins. The base
+        implementation routes through ``sample_task`` with a
+        client-keyed generator; distributions with out-of-band per-client
+        shards can override."""
+        return self.sample_task(np.random.default_rng([seed, 0x9E37, i]))
+
     def sample_support_block_reference(self, rng: np.random.Generator,
                                        rounds: int, clients: int,
                                        support: int,

@@ -1,6 +1,15 @@
 """Training launcher: federated meta-training (TinyReptile rounds) of any
 --arch over heterogeneous synthetic LM clients, with checkpointing.
 
+The fleet is persistent (one ``LMClientStream`` per client id).
+``--participation`` thins check-ins i.i.d.; ``--availability
+diurnal|markov`` replaces that with a structured check-in process over
+the fleet (rounds where nobody is available are idle: no step, no
+transport). ``--buffer-size K`` makes the server FedBuff-style async:
+each round's client delta lands in a buffer that is applied only every
+K arrivals, staleness-discounted (1/sqrt(1+tau)) — the launcher-scale
+mirror of the round engine's ``BufferedAggregation``.
+
 On this CPU container use --reduced (the full configs are dry-run only):
 
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
@@ -21,8 +30,10 @@ import numpy as np
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import ALL_ARCHS, get_arch
-from repro.core.engine import CommChannel
+from repro.core.engine import CommChannel, meta_interpolate, streaming_sgd
 from repro.core.pipeline import PartialParticipation, single_device_of
+from repro.core.pool import (DiurnalAvailability, MarkovAvailability,
+                             default_staleness_weight)
 from repro.data import LMClientStream
 from repro.models import build_model
 from repro.optim.schedules import linear_anneal
@@ -30,7 +41,30 @@ from repro.runtime.steps import (make_meta_train_step, microbatch,
                                  prefetch_batches)
 
 
-def main():
+def fraction_arg(s: str) -> float:
+    """argparse type: a fraction in (0, 1] — rejected AT PARSE TIME with
+    a clear message instead of failing deep inside schedule planning."""
+    try:
+        v = float(s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected a number, got {s!r}")
+    if not 0.0 < v <= 1.0:
+        raise argparse.ArgumentTypeError(
+            f"must be a fraction in (0, 1], got {v}")
+    return v
+
+
+def positive_int_arg(s: str) -> int:
+    try:
+        v = int(s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected an integer, got {s!r}")
+    if v < 1:
+        raise argparse.ArgumentTypeError(f"must be >= 1, got {v}")
+    return v
+
+
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(ALL_ARCHS))
     ap.add_argument("--reduced", action="store_true")
@@ -41,16 +75,38 @@ def main():
     ap.add_argument("--beta", type=float, default=0.02)
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--clients", type=int, default=64)
-    ap.add_argument("--participation", type=float, default=1.0,
+    ap.add_argument("--pool-size", type=positive_int_arg, default=None,
+                    help="size of the persistent client fleet (overrides "
+                         "--clients; every client keeps its own data "
+                         "stream across check-ins)")
+    ap.add_argument("--participation", type=fraction_arg, default=1.0,
                     help="fraction of the client fleet that checks in "
                          "each round (a PartialParticipation schedule "
                          "over the pool); each round's training client "
-                         "is drawn among that round's participants")
+                         "is drawn among that round's participants; "
+                         "must be in (0, 1]")
+    ap.add_argument("--availability", default="iid",
+                    choices=("iid", "diurnal", "markov"),
+                    help="structured check-in process over the fleet "
+                         "(diurnal sine / two-state Markov); rounds "
+                         "where nobody is available are idle")
+    ap.add_argument("--buffer-size", type=positive_int_arg, default=None,
+                    help="FedBuff-style async server: apply buffered "
+                         "client deltas only every K arrivals, "
+                         "staleness-discounted")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    if args.availability != "iid" and args.participation < 1.0:
+        ap.error("--availability replaces the i.i.d. --participation "
+                 "schedule; pass one or the other")
+    return args
+
+
+def main():
+    args = parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -65,23 +121,32 @@ def main():
         except FileNotFoundError:
             pass
 
-    clients = [LMClientStream(cfg.vocab_size, cid)
-               for cid in range(args.clients)]
+    fleet = args.pool_size or args.clients
+    clients = [LMClientStream(cfg.vocab_size, cid) for cid in range(fleet)]
     alpha_sched = linear_anneal(args.alpha, args.rounds, floor=args.alpha * 0.1)
     rng = np.random.default_rng(args.seed)
 
-    # device-availability schedule: with --participation < 1 only a
-    # fleet subset checks in each round; the round's client is drawn
-    # among the participants (the engine's ClientSchedule planning,
-    # reused at launcher scale). Transport is billed per round at the
-    # paper's fp32 accounting.
+    # device-availability schedule over the persistent fleet: with
+    # --participation < 1 only a subset checks in each round (i.i.d.);
+    # --availability swaps that for a diurnal/Markov process whose
+    # troughs can leave a round with NOBODY available (idle round).
+    # The round's training client is drawn among the participants.
+    # Transport is billed per non-idle round at the paper's fp32
+    # accounting.
     checkin = None
-    if not 0.0 < args.participation <= 1.0:
-        raise SystemExit(f"--participation must be in (0, 1], got "
-                         f"{args.participation}")
-    if args.participation < 1.0:
+    # bill the full trajectory on resume (the old absolute-round
+    # formula), minus any pre-resume idle rounds under --availability
+    billed_rounds = start_round
+    if args.availability != "iid":
+        proc = (DiurnalAvailability(period=24)
+                if args.availability == "diurnal" else MarkovAvailability())
+        full = np.asarray(proc.availability(rng, 0, args.rounds, fleet),
+                          bool)
+        billed_rounds = int(full[:start_round].any(axis=1).sum())
+        checkin = full[start_round:]
+    elif args.participation < 1.0:
         checkin = PartialParticipation(args.participation).plan_schedule(
-            rng, start_round, args.rounds, args.clients,
+            rng, start_round, args.rounds, fleet,
             args.k_inner)["participation"]
     channel = CommChannel()
     round_bill = 2 * channel.payload_bytes(phi)     # downlink + uplink
@@ -89,6 +154,30 @@ def main():
     step = jax.jit(make_meta_train_step(model, beta=args.beta,
                                         alpha=args.alpha),
                    donate_argnums=(0,))
+    # FedBuff mode splits the fused round: the inner stream runs
+    # immediately, the server interpolation is deferred to the flush
+    # (phi is NOT donated — the delta needs it)
+    inner = jax.jit(lambda p, b: streaming_sgd(model.loss_fn, p, b,
+                                               args.beta))
+    buffer = []                 # (round, delta) pairs awaiting a flush
+    flushes = 0
+
+    def flush_buffer(phi, flush_rnd, alpha_t):
+        """Apply the buffered deltas, staleness-discounted and
+        normalized, as one meta step. Also called to DRAIN the buffer
+        before checkpoints and at run end — pending updates must not be
+        silently dropped (a resume would otherwise lose up to
+        buffer_size - 1 rounds of client work)."""
+        taus = jnp.asarray([float(flush_rnd - r) for r, _ in buffer])
+        ws = default_staleness_weight(taus)
+        ws = ws / ws.sum()
+        mean_delta = jax.tree.map(
+            lambda *ds: sum(w * d for w, d in zip(ws, ds)),
+            *[d for _, d in buffer])
+        phi_hat = jax.tree.map(jnp.add, phi, mean_delta)
+        buffer.clear()
+        return meta_interpolate(phi, phi_hat, alpha_t, use_pallas=False)
+
     device = single_device_of(phi)      # staging target for the prefetcher
 
     def make_round_batch(i):
@@ -101,6 +190,8 @@ def main():
             client = clients[int(rng.integers(len(clients)))]
         else:
             avail = np.flatnonzero(checkin[i])
+            if len(avail) == 0:
+                return rnd, None, float(alpha_sched(rnd)), None
             client = clients[int(avail[rng.integers(len(avail))])]
         raw = client.batch(rng, args.batch, args.seq)
         batch = {}
@@ -120,21 +211,42 @@ def main():
     staged = prefetch_batches(make_round_batch, args.rounds - start_round)
     for rnd, zipf_a, alpha_t, batch in staged:
         t0 = time.time()
-        phi, metrics = step(phi, batch, jnp.float32(alpha_t))
-        # derived from the ABSOLUTE round so resumed runs keep billing
-        # the full trajectory, not just the post-restore tail
-        comm_bytes = (rnd + 1) * round_bill
-        print(json.dumps({
-            "round": rnd, "client": zipf_a,
-            "loss": float(metrics["loss"]),
-            "inner_first": float(metrics["inner_first"]),
-            "inner_last": float(metrics["inner_last"]),
-            "alpha": alpha_t, "comm_mb": round(comm_bytes / 2**20, 2),
-            "dt_s": round(time.time() - t0, 3)}),
-            flush=True)
+        if batch is None:                   # availability trough: idle
+            print(json.dumps({"round": rnd, "idle": True,
+                              "alpha": alpha_t}), flush=True)
+            continue
+        if args.buffer_size:
+            phi_hat, losses = inner(phi, batch)
+            buffer.append((rnd, jax.tree.map(jnp.subtract, phi_hat, phi)))
+            metrics = {"loss": losses.mean(), "inner_first": losses[0],
+                       "inner_last": losses[-1]}
+            if len(buffer) >= args.buffer_size:
+                phi = flush_buffer(phi, rnd, alpha_t)
+                flushes += 1
+        else:
+            phi, metrics = step(phi, batch, jnp.float32(alpha_t))
+        billed_rounds += 1
+        comm_bytes = billed_rounds * round_bill
+        row = {"round": rnd, "client": zipf_a,
+               "loss": float(metrics["loss"]),
+               "inner_first": float(metrics["inner_first"]),
+               "inner_last": float(metrics["inner_last"]),
+               "alpha": alpha_t, "comm_mb": round(comm_bytes / 2**20, 2),
+               "dt_s": round(time.time() - t0, 3)}
+        if args.buffer_size:
+            row["buffered"] = len(buffer)
+            row["flushes"] = flushes
+        print(json.dumps(row), flush=True)
         if args.ckpt_dir and (rnd + 1) % args.ckpt_every == 0:
+            if buffer:                      # checkpoints see ALL updates
+                phi = flush_buffer(phi, rnd, alpha_t)
+                flushes += 1
             save_checkpoint(args.ckpt_dir, phi, rnd + 1,
                             extra={"arch": args.arch})
+    if buffer:                              # drain the pending tail
+        phi = flush_buffer(phi, buffer[-1][0], float(alpha_sched(
+            buffer[-1][0])))
+        flushes += 1
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, phi, args.rounds,
                         extra={"arch": args.arch})

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Execute every ```python code block in docs/*.md so the examples
+cannot rot (the CI docs job; see .github/workflows/ci.yml).
+
+Blocks within one file run top to bottom in ONE shared namespace — a
+file's first block may define setup (imports, params) that later blocks
+reuse, exactly as a reader executing the page would. Files are isolated
+from each other. Fences tagged anything other than exactly ``python``
+(```bash, ```text, ```python notest, ...) are skipped.
+
+  PYTHONPATH=src python tools/check_docs.py [docs/...md ...]
+"""
+from __future__ import annotations
+
+import glob
+import re
+import sys
+import time
+import types
+
+FENCE = re.compile(r"^```python[ \t]*\n(.*?)^```[ \t]*$",
+                   re.MULTILINE | re.DOTALL)
+
+
+def blocks_of(text: str):
+    return [m.group(1) for m in FENCE.finditer(text)]
+
+
+def check_file(path: str) -> int:
+    with open(path) as f:
+        blocks = blocks_of(f.read())
+    if not blocks:
+        print(f"  {path}: no python blocks")
+        return 0
+    # a REAL registered module, not a bare dict: dataclasses (among
+    # others) resolves annotations via sys.modules[cls.__module__]
+    mod = types.ModuleType("docs_" + re.sub(r"\W", "_", path))
+    sys.modules[mod.__name__] = mod
+    namespace = mod.__dict__
+    for i, src in enumerate(blocks, 1):
+        t0 = time.time()
+        try:
+            exec(compile(src, f"{path}#block{i}", "exec"), namespace)
+        except Exception as exc:
+            print(f"  {path} block {i}/{len(blocks)}: FAILED — "
+                  f"{type(exc).__name__}: {exc}")
+            for ln, line in enumerate(src.splitlines(), 1):
+                print(f"    {ln:3d} | {line}")
+            return 1
+        print(f"  {path} block {i}/{len(blocks)}: ok "
+              f"({time.time() - t0:.1f}s)")
+    return 0
+
+
+def main(argv):
+    paths = argv or sorted(glob.glob("docs/*.md"))
+    if not paths:
+        print("no docs/*.md files found (run from the repo root)")
+        return 1
+    failures = 0
+    for path in paths:
+        failures += check_file(path)
+    if failures:
+        print(f"{failures} file(s) with failing blocks")
+        return 1
+    print("all doc code blocks executed cleanly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
