@@ -31,14 +31,20 @@ Architecture (post engine refactor):
   meta.py        — shared substrate: inner loops (finetune_online /
                    finetune_batch) and the paper's evaluation protocol.
   federated.py   — mesh-scale pod-client mode (pods as federated
-                   clients via shard_map).
+                   clients), a thin configuration of the engine's
+                   building blocks under shard_map.
+
+``run_federated(mesh=...)`` (or an explicit ``client_mesh()``) shards
+the per-round client axis across a device mesh: per-device vmap over
+the local cohort shard, collective (psum) server aggregation, sharded
+schedule/pool state — the fleet-scale path.
 
 A new algorithm or transport policy is one strategy / CommChannel
 object, not a new file-long loop.
 """
 from repro.core.engine import (CommChannel, PartialCommChannel,  # noqa: F401
-                               clear_runner_cache, run_federated,
-                               runner_cache_stats)
+                               clear_runner_cache, client_mesh,
+                               run_federated, runner_cache_stats)
 from repro.core.fedavg import fedavg_train, fedsgd_train  # noqa: F401
 from repro.core.pipeline import (BlockPrefetcher, ClientSchedule,  # noqa: F401
                                  PartialParticipation, SamplingPolicy,

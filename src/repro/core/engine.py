@@ -52,6 +52,19 @@ dispatch per client per round. This module owns all of that once:
   (``repro.kernels.ops.meta_update``) by default on TPU backends;
   elsewhere the same fp32 math runs as plain XLA (the kernel would only
   interpret there).
+* ``run_federated(..., mesh=...)`` SHARDS THE CLIENT AXIS across a
+  device mesh: the block runner wraps its scan in ``shard_map`` (manual
+  over a 1-D "clients" mesh axis), each device vmaps over its local
+  cohort shard, and server aggregation becomes a weighted all-reduce
+  (``server_aggregate_weighted(..., axis_name="clients")`` — a masked
+  psum of per-shard partial sums). The round scan carries REPLICATED
+  phi next to the client-sharded ``ClientSchedule`` and ``PoolState``;
+  cohorts are padded to a multiple of the shard count via the existing
+  validity/participation masks, so uneven cohorts never retrace, and
+  the two hot-path invariants survive sharding: zero per-round host
+  dispatches and one jit trace per (strategy, beta, channel,
+  schedule-shape, pool-shape, mesh) config. ``mesh=None`` (the
+  default) is bit-for-bit the single-device engine.
 
 ``meta_interpolate`` and ``streaming_sgd`` are the engine's round
 building blocks, shared with the mesh-scale cohort step in
@@ -62,8 +75,9 @@ otherwise pin up to 64 stale executables).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
+import inspect
 import logging
 import math
 from typing import Dict, List, Optional
@@ -71,15 +85,23 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.meta import evaluate_init
 from repro.core.pipeline import (ClientSchedule, SamplingPolicy,
-                                 UniformSampling, plan_blocks,
-                                 prefetch_items, single_device_of)
-from repro.core.pool import BufferedAggregation, ClientPool, PoolState
+                                 UniformSampling, block_shardings,
+                                 plan_blocks, prefetch_items,
+                                 single_device_of)
+from repro.core.pool import (BufferedAggregation, ClientPool, PoolState,
+                             pool_state_specs)
 from repro.data.tasks import TaskDistribution
+from repro.runtime.sharding import shard_map_compat
 
 logger = logging.getLogger(__name__)
+
+#: the engine's mesh axis: run_federated(mesh=...) shards the per-round
+#: cohort over it (see client_mesh).
+CLIENT_AXIS = "clients"
 
 #: bytes per parameter for each transport payload dtype (paper Table II
 #: generalized: the paper ships fp32; fp16/int8 model compressed uplinks).
@@ -89,6 +111,48 @@ PAYLOAD_ITEMSIZE = {"float32": 4, "float16": 2, "int8": 1}
 def default_use_pallas() -> bool:
     """Pallas server update only where it compiles natively."""
     return jax.default_backend() == "tpu"
+
+
+def client_mesh(devices=None) -> Mesh:
+    """A 1-D device mesh over the engine's client axis ("clients").
+
+    ``devices``: None uses every ``jax.devices()``; an int takes the
+    first n; a sequence of Devices is used as given. Pass the result
+    (or just the int / "auto") to ``run_federated(mesh=...)`` to shard
+    each round's cohort across the devices.
+    """
+    if devices is None:
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(f"client_mesh asked for {devices} devices; "
+                             f"this process has {len(avail)} (forcing "
+                             f"host devices needs XLA_FLAGS="
+                             f"--xla_force_host_platform_device_count)")
+        devs = avail[:devices]
+    else:
+        devs = list(devices)
+    return Mesh(np.array(devs), (CLIENT_AXIS,))
+
+
+def _resolve_mesh(mesh) -> Optional[Mesh]:
+    """Normalize run_federated's mesh argument: None passes through,
+    "auto" builds a mesh over every device, an int over the first n,
+    and an explicit Mesh must be 1-D over the "clients" axis."""
+    if mesh is None:
+        return None
+    if mesh == "auto":
+        return client_mesh()
+    if isinstance(mesh, int):
+        return client_mesh(mesh)
+    if tuple(mesh.axis_names) != (CLIENT_AXIS,):
+        raise ValueError(
+            f"run_federated shards the cohort over a 1-D '{CLIENT_AXIS}' "
+            f"mesh axis; got axes {tuple(mesh.axis_names)} (build one "
+            f"with repro.core.engine.client_mesh, or pass an int / "
+            f"'auto')")
+    return mesh
 
 
 def meta_interpolate(phi, phi_hat, alpha, *, use_pallas: Optional[bool] = None):
@@ -413,16 +477,57 @@ class _BlockRunner:
     — all inside the scan, so persistent identities and async
     aggregation still cost ZERO per-round host dispatches.
 
+    Mesh runs (``mesh`` is a 1-D "clients" Mesh) wrap the same scan in
+    ``shard_map`` manual over the client axis: each device holds phi
+    REPLICATED and runs the client phase over its local cohort shard
+    (the schedule's per-client rows and the batch arrive pre-sharded
+    from the prefetcher's NamedSharding device_put), then aggregation
+    reduces across shards — ``server_aggregate_weighted(...,
+    axis_name="clients")``, whose ``weighted_client_mean`` fuses the
+    per-leaf partial sums into ONE psum. Collectives are the sharded
+    hot path's scarce resource (every all-reduce is a cross-device
+    rendezvous), so that fused psum is the only per-round collective on
+    the flat path: round losses stay shard-local partial sums and the
+    whole (rounds,) vector all-reduces once per block. Pooled mesh runs
+    shard the per-client ``PoolState`` rows too: one fused all_gather
+    of the round's (tiny) cohort+participation rows lets each shard
+    scatter updates for exactly the pool clients it OWNS (foreign
+    indices route out of range and drop), while the FedBuff buffer
+    becomes per-shard slabs — the flush predicate runs on REPLICATED
+    count/oldest-tag counters carried by the scan (no per-round
+    collective), and the flush itself normalizes by a psum-reduced
+    weight denominator and folds through the collective aggregation
+    hook: "the buffer reduced across shards at flush". The mesh path
+    always runs the scheduled body (uniform schedules are just uniform
+    weights there, with the per-step masking skipped — see ``masked``).
+
     ``trace_count`` increments once per jit trace; with the engine's
     fixed per-run block shape it stays at 1 per (strategy, beta,
-    channel, schedule-shape, pool-shape) config — the retrace-free
-    contract's observable.
+    channel, schedule-shape, pool-shape, masked, mesh) config — the
+    retrace-free contract's observable.
     """
 
     def __init__(self, strategy, beta, channel: CommChannel,
                  scheduled: bool = False, pooled: bool = False,
-                 buffered: Optional[BufferedAggregation] = None):
+                 buffered: Optional[BufferedAggregation] = None,
+                 mesh: Optional[Mesh] = None,
+                 masked: Optional[bool] = None):
         self.trace_count = 0
+        axis = CLIENT_AXIS if mesh is not None else None
+        if mesh is not None:
+            if not scheduled:
+                raise ValueError("mesh runs always use the scheduled "
+                                 "body (engine-internal invariant)")
+            self._check_collective_hook(strategy)
+        # masked: whether the scheduled client phase honors per-client
+        # step budgets via the lax.cond-masked hooks. Uniform schedules
+        # (full budget everywhere — every mesh run of UniformSampling,
+        # every pooled uniform run) skip the per-step masking: the
+        # masked hooks reproduce the unmasked ones op-for-op at k ==
+        # budget (pinned in tests), but pay one lax.cond per inner
+        # step, which is pure overhead on the hot path.
+        self.masked = scheduled if masked is None else bool(masked)
+        masked_hooks = self.masked
         beta_f = jnp.float32(beta)
         simulate = channel.simulates_quantization
         uplink_ref = getattr(strategy, "uplink_ref", "params")
@@ -438,7 +543,7 @@ class _BlockRunner:
                 m = channel.masks_for_round(chunk_ids, sched.round_index)
             phi_down = (channel.transmit(phi, masks=m)
                         if simulate else phi)
-            if scheduled:
+            if scheduled and masked_hooks:
                 results, losses = jax.vmap(
                     lambda b, k: strategy.client_update_steps(
                         phi_down, b, beta_f, k))(batch, sched.local_steps)
@@ -474,12 +579,23 @@ class _BlockRunner:
         def make_round_fn(masks, chunk_ids):
             def round_fn(phi, xs):
                 sched, batch = xs    # sched: one ClientSchedule row;
-                #                      batch leaves: (C, S, ...)
+                #                      batch leaves: (C, S, ...) — the
+                #                      LOCAL cohort shard on mesh runs
 
                 def live(phi):
                     results, losses = client_phase(phi, sched, batch,
                                                    masks, chunk_ids)
-                    if scheduled:
+                    if axis is not None:
+                        phi = strategy.server_aggregate_weighted(
+                            phi, results, sched.alpha, beta_f,
+                            sched.weights, axis_name=axis)
+                        # the round loss stays a SHARD-LOCAL partial sum
+                        # here; the block body all-reduces the whole
+                        # (rounds,) vector once per block — a per-round
+                        # scalar psum would pay one extra cross-device
+                        # rendezvous every round
+                        loss = weighted_round_loss(losses, sched)
+                    elif scheduled:
                         phi = strategy.server_aggregate_weighted(
                             phi, results, sched.alpha, beta_f,
                             sched.weights)
@@ -496,11 +612,34 @@ class _BlockRunner:
                 return jax.lax.cond(sched.valid, live, dead, phi)
             return round_fn
 
+        _NEVER = jnp.int32(2 ** 30)      # "no buffered update" round tag
+
+        def staleness_overdue(buf_round, count, cap, round_index):
+            """The availability-aware flush predicate (one extra
+            comparison OR-ed into the flush cond): True when holding
+            the buffer past this round would let its oldest update
+            reach the staleness deadline. (Unsharded path; the mesh
+            path tracks the replicated oldest tag in the scan carry —
+            see make_pooled_round_fn — so no per-round collective is
+            needed there either.)"""
+            valid = jnp.arange(cap) < count
+            oldest = jnp.where(valid, buf_round, _NEVER).min()
+            return (count > 0) & (round_index - oldest + 1
+                                  >= buffered.flush_staleness)
+
         def make_pooled_round_fn(masks, chunk_ids):
             def round_fn(carry, xs):
                 sched, batch = xs
 
                 def live(carry):
+                    if axis is not None:
+                        # mesh carry: (phi, PoolState, replicated flush
+                        # counters) — see live_sharded
+                        phi, ps, gcount, goldest = carry
+                        results, losses = client_phase(phi, sched, batch,
+                                                       masks, chunk_ids)
+                        return live_sharded(phi, ps, gcount, goldest,
+                                            sched, results, losses)
                     phi, ps = carry
                     results, losses = client_phase(phi, sched, batch,
                                                    masks, chunk_ids)
@@ -544,8 +683,12 @@ class _BlockRunner:
                             phi, buf, buf_round, count, flushes = args
                             return phi, count, flushes
 
+                        do_flush = count >= buffered.buffer_size
+                        if buffered.flush_staleness is not None:
+                            do_flush = do_flush | staleness_overdue(
+                                buf_round, count, cap, sched.round_index)
                         phi, count, flushes = jax.lax.cond(
-                            count >= buffered.buffer_size, flush, hold,
+                            do_flush, flush, hold,
                             (phi, buf, buf_round, count, ps.flushes))
 
                     # scatter the cohort's identity-state rows back:
@@ -566,6 +709,110 @@ class _BlockRunner:
                         buf_count=count, flushes=flushes)
                     return (phi, ps), weighted_round_loss(losses, sched)
 
+                def live_sharded(phi, ps, gcount, goldest, sched, results,
+                                 losses):
+                    # mesh round: phi replicated, per-client state rows
+                    # and the cohort/batch sharded over the client
+                    # axis. Per-round collectives are kept to the bare
+                    # minimum — ONE fused all_gather of the (tiny)
+                    # cohort+participation rows and the aggregation's
+                    # fused psum; the flush predicate runs on the
+                    # REPLICATED (gcount, goldest) counters carried by
+                    # the scan, and the round loss stays a shard-local
+                    # partial (all-reduced once per block).
+                    c_local = sched.cohort.shape[0]
+                    packed = jnp.concatenate(
+                        [sched.cohort,
+                         sched.participation.astype(jnp.int32)])
+                    packed = jax.lax.all_gather(packed, axis)
+                    cohort_f = packed[:, :c_local].reshape(-1)
+                    part_f = packed[:, c_local:].reshape(-1) > 0
+
+                    if buffered is None:
+                        phi = strategy.server_aggregate_weighted(
+                            phi, results, sched.alpha, beta_f,
+                            sched.weights, axis_name=axis)
+                        buf, buf_round = ps.buf_updates, ps.buf_round
+                        count, flushes = ps.buf_count, ps.flushes
+                    else:
+                        # per-shard slab: local arrivals compact into
+                        # THIS shard's buffer; the flush predicate is
+                        # on the replicated global count, and the flush
+                        # itself is a weighted all-reduce with a
+                        # psum-normalized denominator — "the buffer
+                        # reduced across shards at flush"
+                        cap = ps.buf_round.shape[0]
+                        arrive = sched.participation.astype(jnp.int32)
+                        cnt = ps.buf_count[0]        # local fill level
+                        slot = jnp.where(
+                            sched.participation,
+                            cnt + jnp.cumsum(arrive) - 1, cap)
+                        buf = jax.tree.map(
+                            lambda b, q: b.at[slot].set(
+                                q.astype(b.dtype), mode="drop"),
+                            ps.buf_updates, results)
+                        buf_round = ps.buf_round.at[slot].set(
+                            sched.round_index, mode="drop")
+                        cnt = cnt + arrive.sum()
+                        gcount = gcount + part_f.sum()
+                        goldest = jnp.where(part_f.any(),
+                                            jnp.minimum(goldest,
+                                                        sched.round_index),
+                                            goldest)
+
+                        def flush(args):
+                            phi, buf, buf_round, cnt, flushes = args
+                            tau = (sched.round_index
+                                   - buf_round).astype(jnp.float32)
+                            w = (buffered.staleness_fn(tau)
+                                 * (jnp.arange(cap) < cnt))
+                            denom = jax.lax.psum(w.sum(), axis)
+                            w = (w / jnp.maximum(denom, 1e-8)
+                                 ).astype(jnp.float32)
+                            phi = strategy.server_aggregate_weighted(
+                                phi, buf, sched.alpha, beta_f, w,
+                                axis_name=axis)
+                            return phi, jnp.int32(0), flushes + 1
+
+                        def hold(args):
+                            phi, buf, buf_round, cnt, flushes = args
+                            return phi, cnt, flushes
+
+                        do_flush = gcount >= buffered.buffer_size
+                        if buffered.flush_staleness is not None:
+                            do_flush = do_flush | (
+                                (gcount > 0)
+                                & (sched.round_index - goldest + 1
+                                   >= buffered.flush_staleness))
+                        phi, cnt, flushes = jax.lax.cond(
+                            do_flush, flush, hold,
+                            (phi, buf, buf_round, cnt, ps.flushes))
+                        gcount = jnp.where(do_flush, 0, gcount)
+                        goldest = jnp.where(do_flush, _NEVER, goldest)
+                        count = cnt[None]            # back to (1,) local
+
+                    # scatter identity rows for the pool clients THIS
+                    # shard owns, wherever in the cohort they sat:
+                    # foreign/idle indices route out of range and drop
+                    n_local = ps.last_seen.shape[0]
+                    base = jax.lax.axis_index(axis) * n_local
+                    loc = cohort_f - base
+                    own = part_f & (loc >= 0) & (loc < n_local)
+                    idx = jnp.where(own, loc, n_local)
+                    safe = jnp.clip(loc, 0, n_local - 1)
+                    gap = (sched.round_index
+                           - ps.last_seen[safe]).astype(jnp.int32)
+                    ps = PoolState(
+                        last_seen=ps.last_seen.at[idx].set(
+                            sched.round_index, mode="drop"),
+                        staleness=ps.staleness.at[idx].set(
+                            gap, mode="drop"),
+                        checkins=ps.checkins.at[idx].add(1, mode="drop"),
+                        buf_updates=buf, buf_round=buf_round,
+                        buf_count=count, flushes=flushes)
+                    loss = weighted_round_loss(losses, sched)
+                    return (phi, ps, gcount, goldest), loss
+
                 def dead(carry):
                     return carry, jnp.float32(0.0)
 
@@ -584,52 +831,180 @@ class _BlockRunner:
                          if simulate and rotating else None)
             return masks, chunk_ids
 
+        def sched_spec():
+            # specs for the whole padded block: per-round vectors
+            # replicated, per-client rows sharded on the client axis
+            return ClientSchedule(
+                valid=P(), alpha=P(), round_index=P(),
+                participation=P(None, axis), local_steps=P(None, axis),
+                weights=P(None, axis),
+                cohort=P(None, axis) if pooled else None)
+
         if pooled:
+            if mesh is None:
+                def block_body(phi, pool_state, sched, batch):
+                    masks, chunk_ids = mask_state(phi)
+                    (phi, pool_state), losses = jax.lax.scan(
+                        make_pooled_round_fn(masks, chunk_ids),
+                        (phi, pool_state), (sched, batch))
+                    return phi, pool_state, losses
+            else:
+                def block_body(phi, pool_state, sched, batch):
+                    masks, chunk_ids = mask_state(phi)
+                    # replicated flush counters enter the carry ONCE per
+                    # block (one psum/pmin here instead of per round)
+                    if buffered is not None:
+                        cnt = pool_state.buf_count[0]
+                        cap = pool_state.buf_round.shape[0]
+                        gcount = jax.lax.psum(cnt, axis)
+                        goldest = jax.lax.pmin(
+                            jnp.where(jnp.arange(cap) < cnt,
+                                      pool_state.buf_round, _NEVER).min(),
+                            axis)
+                    else:
+                        gcount, goldest = jnp.int32(0), _NEVER
+                    (phi, pool_state, _, _), losses = jax.lax.scan(
+                        make_pooled_round_fn(masks, chunk_ids),
+                        (phi, pool_state, gcount, goldest),
+                        (sched, batch))
+                    # per-round losses were shard-local partial sums
+                    return phi, pool_state, jax.lax.psum(losses, axis)
+
+            body = block_body
+            if mesh is not None:
+                state_spec = pool_state_specs(
+                    PoolState(0, 0, 0,
+                              buf_updates=(0 if buffered else None),
+                              buf_round=(0 if buffered else None),
+                              buf_count=(0 if buffered else None),
+                              flushes=(0 if buffered else None)),
+                    axis)
+                body = shard_map_compat(
+                    block_body, mesh=mesh,
+                    in_specs=(P(), state_spec, sched_spec(),
+                              P(None, axis)),
+                    out_specs=(P(), state_spec, P()),
+                    manual_axes_names={axis})
+
             def run_block(phi, pool_state, sched, batch):
                 self.trace_count += 1             # runs at trace time only
-                masks, chunk_ids = mask_state(phi)
-                (phi, pool_state), losses = jax.lax.scan(
-                    make_pooled_round_fn(masks, chunk_ids),
-                    (phi, pool_state), (sched, batch))
-                return phi, pool_state, losses
+                return body(phi, pool_state, sched, batch)
 
             self._jit = jax.jit(run_block, donate_argnums=(0, 1))
         else:
+            def block_body(phi, sched, batch):
+                masks, chunk_ids = mask_state(phi)
+                phi, losses = jax.lax.scan(make_round_fn(masks, chunk_ids),
+                                           phi, (sched, batch))
+                if mesh is not None:
+                    # per-round losses were shard-local partial sums;
+                    # one (rounds,)-vector all-reduce per block
+                    losses = jax.lax.psum(losses, axis)
+                return phi, losses
+
+            body = block_body
+            if mesh is not None:
+                body = shard_map_compat(
+                    block_body, mesh=mesh,
+                    in_specs=(P(), sched_spec(), P(None, axis)),
+                    out_specs=(P(), P()),
+                    manual_axes_names={axis})
+
             def run_block(phi, sched, batch):
                 self.trace_count += 1             # runs at trace time only
-                masks, chunk_ids = mask_state(phi)
-                return jax.lax.scan(make_round_fn(masks, chunk_ids), phi,
-                                    (sched, batch))
+                return body(phi, sched, batch)
 
             self._jit = jax.jit(run_block, donate_argnums=(0,))
+
+    @staticmethod
+    def _check_collective_hook(strategy) -> None:
+        """Mesh runs need the axis_name-aware collective aggregation
+        form; fail at construction with a plugin-author-facing message
+        instead of a TypeError from inside the trace."""
+        try:
+            sig = inspect.signature(strategy.server_aggregate_weighted)
+        except (TypeError, ValueError):      # builtins/partials: assume ok
+            return
+        params = sig.parameters.values()
+        if not ("axis_name" in sig.parameters or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD for p in params)):
+            raise ValueError(
+                f"{type(strategy).__name__}.server_aggregate_weighted "
+                f"does not accept axis_name=: mesh-sharded runs reduce "
+                f"the weighted client aggregate across the "
+                f"'{CLIENT_AXIS}' mesh axis — add axis_name=None to the "
+                f"hook and route it through weighted_client_mean (see "
+                f"docs/PLUGINS.md)")
 
     def __call__(self, *args):
         return self._jit(*args)
 
 
-@functools.lru_cache(maxsize=64)
-def _cached_block_runner(strategy, beta, channel, scheduled, pooled,
-                         buffered) -> _BlockRunner:
-    return _BlockRunner(strategy, beta, channel, scheduled, pooled,
-                        buffered)
+class _RunnerLRU:
+    """Hand-rolled LRU replacing the old ``functools.lru_cache``: same
+    counters and eviction order, but with INSPECTABLE keys, so
+    ``runner_cache_stats`` can account for mesh-keyed entries (the old
+    opaque cache could not tell a sharded runner from a flat one)."""
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._entries: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, build):
+        """Cached runner for ``key`` (raises TypeError on unhashable
+        keys, like lru_cache), building and LRU-inserting on a miss."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return self._entries[key]
+        self.misses += 1
+        runner = build()
+        self._entries[key] = runner
+        if len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return runner
+
+    def keys(self):
+        return list(self._entries.keys())
+
+    def clear(self):
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
 
 
+_RUNNER_CACHE = _RunnerLRU(maxsize=64)
 _UNHASHABLE_MISSES = {"count": 0}
 
 
 def _block_runner(strategy, beta, channel: CommChannel,
                   scheduled: bool = False, pooled: bool = False,
-                  buffered: Optional[BufferedAggregation] = None
-                  ) -> _BlockRunner:
+                  buffered: Optional[BufferedAggregation] = None,
+                  mesh: Optional[Mesh] = None,
+                  masked: Optional[bool] = None) -> _BlockRunner:
     """Strategies and channels are frozen dataclasses, so identically-
     configured runs (every test/bench re-entry) reuse one jitted runner
     instead of recompiling per call; ``scheduled`` (the policy's static
-    schedule shape), ``pooled``, and the ``buffered`` config are part of
-    the key. Unhashable custom strategies still work — they pay a fresh
-    trace per run, counted and logged so sweeps notice."""
+    schedule shape), ``pooled``, the ``buffered`` config, and the
+    ``mesh`` are part of the key. A Mesh hashes over its device list
+    and axis names, so a runner traced for one device topology can
+    NEVER be served for another (a 4-device and an 8-device mesh are
+    distinct keys, and jax.devices() cannot change within a process for
+    the mesh=None entries). Unhashable custom strategies still work —
+    they pay a fresh trace per run, counted and logged so sweeps
+    notice."""
+    masked = bool(scheduled) if masked is None else bool(masked)
+    key = (strategy, float(beta), channel, bool(scheduled), bool(pooled),
+           buffered, masked, mesh)
+
+    def build():
+        return _BlockRunner(strategy, beta, channel, scheduled, pooled,
+                            buffered, mesh, masked)
+
     try:
-        return _cached_block_runner(strategy, float(beta), channel,
-                                    bool(scheduled), bool(pooled), buffered)
+        return _RUNNER_CACHE.get(key, build)
     except TypeError:
         _UNHASHABLE_MISSES["count"] += 1
         logger.warning(
@@ -638,24 +1013,29 @@ def _block_runner(strategy, beta, channel: CommChannel,
             "per run). Make custom strategies frozen dataclasses to cache "
             "them.", _UNHASHABLE_MISSES["count"],
             type(strategy).__name__, type(channel).__name__)
-        return _BlockRunner(strategy, beta, channel, scheduled, pooled,
-                            buffered)
+        return build()
 
 
 def runner_cache_stats() -> Dict[str, int]:
-    """Block-runner cache counters: lru hits/misses/size plus how many
-    times an unhashable strategy forced an uncached runner."""
-    info = _cached_block_runner.cache_info()
-    return {"hits": info.hits, "misses": info.misses,
-            "currsize": info.currsize, "maxsize": info.maxsize,
-            "unhashable_misses": _UNHASHABLE_MISSES["count"]}
+    """Block-runner cache counters: lru hits/misses/size, how many
+    times an unhashable strategy forced an uncached runner, and how
+    many of the cached entries are mesh-keyed (sharded runners pin
+    multi-device executables — sweeps over topologies should clear
+    between phases)."""
+    return {"hits": _RUNNER_CACHE.hits, "misses": _RUNNER_CACHE.misses,
+            "currsize": len(_RUNNER_CACHE.keys()),
+            "maxsize": _RUNNER_CACHE.maxsize,
+            "unhashable_misses": _UNHASHABLE_MISSES["count"],
+            "mesh_entries": sum(1 for k in _RUNNER_CACHE.keys()
+                                if k[-1] is not None)}
 
 
 def clear_runner_cache() -> None:
-    """Drop every cached jitted block runner (and reset the counters).
-    Long sweeps over many strategy/channel configs should call this
-    between phases so up to 64 stale executables don't stay pinned."""
-    _cached_block_runner.cache_clear()
+    """Drop every cached jitted block runner — mesh-keyed sharded
+    runners included — and reset the counters. Long sweeps over many
+    strategy/channel/topology configs should call this between phases
+    so up to 64 stale executables don't stay pinned."""
+    _RUNNER_CACHE.clear()
     _UNHASHABLE_MISSES["count"] = 0
 
 
@@ -669,7 +1049,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   sampler: str = "reference",
                   sampling: Optional[SamplingPolicy] = None,
                   pool: Optional[ClientPool] = None,
-                  buffered: Optional[BufferedAggregation] = None) -> Dict:
+                  buffered: Optional[BufferedAggregation] = None,
+                  mesh=None) -> Dict:
     """Run `rounds` federated rounds of `strategy`.
 
     Returns {"params", "history"} (+ "comm_bytes" and "per_client_bytes"
@@ -707,6 +1088,20 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     dict (last_seen / staleness / checkins arrays [+ flushes,
     buffered_pending]); `pool=None` keeps the legacy anonymous-cohort
     path bit-for-bit.
+
+    `mesh` SHARDS THE CLIENT AXIS across devices: pass a 1-D "clients"
+    Mesh (see `client_mesh`), an int (first n devices), or "auto"
+    (every device). The cohort is padded to a multiple of the device
+    count with scheduled-out slots (participation False, weight 0), the
+    prefetcher stages each block with a NamedSharding (client rows
+    split, per-round vectors replicated), each device vmaps its local
+    shard, and aggregation / transport-weight reductions run as
+    collectives inside the scan — still zero per-round host dispatches
+    and one jit trace per config. Schedules, host RNG draws, billing,
+    and pooled identity state are mesh-INDEPENDENT: an N-device run
+    computes the same training trajectory as the 1-device run up to
+    float reduction order. `mesh=None` (default) is bit-for-bit the
+    single-device engine.
     """
     if channel is None:
         channel = CommChannel()
@@ -735,21 +1130,41 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         raise ValueError(f"pool of {pool.size} clients cannot seat a "
                          f"cohort of {clients_per_round} (identities are "
                          f"unique within a round)")
+    mesh = _resolve_mesh(mesh)
+    shards = int(mesh.devices.size) if mesh is not None else 1
+    # mesh runs pad the cohort to a multiple of the shard count: the
+    # pad slots are permanently scheduled out (participation False,
+    # weight 0, zero batch) so every device sees an equal shard and the
+    # validity-mask machinery keeps them inert
+    c_pad = -(-clients_per_round // shards) * shards
     rng = np.random.default_rng(seed)
     # private copy: the block runner donates its phi argument, and the
     # caller's init_params must stay usable (they are reused across runs)
     phi = jax.tree.map(jnp.array, init_params)
+    if mesh is not None:
+        phi = jax.device_put(phi, NamedSharding(mesh, P()))
     history: List[Dict] = []
     comm_bytes = 0
     per_client_bytes = np.zeros(pool.size if pooled else clients_per_round,
                                 np.int64)
-    scheduled = (pooled or
-                 getattr(sampling, "schedule_kind", "scheduled") != "uniform")
+    uniform = getattr(sampling, "schedule_kind", "scheduled") == "uniform"
+    scheduled = pooled or mesh is not None or not uniform
+    # uniform schedules run every client at the full budget, so the
+    # scheduled body skips the per-step lax.cond masking (bit-for-bit
+    # identical at k == budget, without the per-inner-step overhead)
+    masked = scheduled and not uniform
     budget = int(strategy.local_step_budget(support))
     run_block = _block_runner(strategy, beta, channel, scheduled,
-                              pooled=pooled, buffered=buffered)
-    pool_state = (pool.init_state(phi, clients_per_round, buffered)
+                              pooled=pooled, buffered=buffered, mesh=mesh,
+                              masked=masked)
+    pool_state = (pool.init_state(phi, c_pad, buffered, shards=shards)
                   if pooled else None)
+    if mesh is not None and pooled:
+        pool_state = jax.device_put(
+            pool_state,
+            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         pool_state_specs(pool_state, CLIENT_AXIS),
+                         is_leaf=lambda x: isinstance(x, P)))
     blocks, pad = plan_blocks(rounds, eval_every, max_block)
     device = single_device_of(phi)       # staging target for the prefetcher
     if strategy.meters_comm:
@@ -797,8 +1212,10 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         round_index[:blk] = r
 
         def pad_rows(a, dtype):
-            out = np.zeros((pad, clients_per_round), dtype)
-            out[:blk] = a
+            # pads BOTH axes: short tail blocks on the round axis and
+            # the mesh cohort pad (c_pad == clients_per_round off-mesh)
+            out = np.zeros((pad, c_pad), dtype)
+            out[:blk, :clients_per_round] = a
             return out
 
         sched = ClientSchedule(
@@ -807,12 +1224,19 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             local_steps=pad_rows(plan["local_steps"], np.int32),
             weights=pad_rows(plan["weights"], np.float32),
             cohort=pad_rows(cohort, np.int32) if pooled else None)
+        batch = {k: np.asarray(v) for k, v in batch.items()}
+        if c_pad > clients_per_round:
+            batch = {k: np.concatenate(
+                [v, np.zeros((v.shape[0], c_pad - clients_per_round)
+                             + v.shape[2:], v.dtype)], axis=1)
+                for k, v in batch.items()}
         if blk < pad:
             batch = {k: np.concatenate(
-                [np.asarray(v),
-                 np.zeros((pad - blk,) + np.asarray(v).shape[1:],
-                          np.asarray(v).dtype)]) for k, v in batch.items()}
-        return part, cohort, jax.device_put((sched, batch), device)
+                [v, np.zeros((pad - blk,) + v.shape[1:], v.dtype)])
+                for k, v in batch.items()}
+        target = (block_shardings(mesh, CLIENT_AXIS, (sched, batch))
+                  if mesh is not None else device)
+        return part, cohort, jax.device_put((sched, batch), target)
 
     staged_iter = prefetch_items(stage, len(blocks), depth=prefetch)
     try:
@@ -856,10 +1280,15 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         out["per_client_bytes"] = [int(b) for b in per_client_bytes]
     if pooled:
         ps = jax.device_get(pool_state)
-        out["pool_state"] = {"last_seen": np.asarray(ps.last_seen),
-                             "staleness": np.asarray(ps.staleness),
-                             "checkins": np.asarray(ps.checkins)}
+        # [:pool.size] drops the mesh shard-padding rows (a no-op slice
+        # on unsharded runs)
+        out["pool_state"] = {
+            "last_seen": np.asarray(ps.last_seen)[:pool.size],
+            "staleness": np.asarray(ps.staleness)[:pool.size],
+            "checkins": np.asarray(ps.checkins)[:pool.size]}
         if buffered is not None:
             out["pool_state"]["flushes"] = int(ps.flushes)
-            out["pool_state"]["buffered_pending"] = int(ps.buf_count)
+            # scalar off-mesh; per-shard fill levels (shards,) on mesh
+            out["pool_state"]["buffered_pending"] = int(
+                np.asarray(ps.buf_count).sum())
     return out

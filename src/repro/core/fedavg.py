@@ -28,7 +28,8 @@ def fedavg_train(loss_fn: Callable, init_params,
                  max_block: int = 512,
                  sampling: Optional[SamplingPolicy] = None,
                  pool: Optional[ClientPool] = None,
-                 buffered: Optional[BufferedAggregation] = None) -> Dict:
+                 buffered: Optional[BufferedAggregation] = None,
+                 mesh=None) -> Dict:
     """FedAVG: clients run E local epochs; server averages the MODELS
     (participation-weighted under a heterogeneity `sampling` policy)."""
     return run_federated(
@@ -37,7 +38,7 @@ def fedavg_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling, pool=pool, buffered=buffered)
+        sampling=sampling, pool=pool, buffered=buffered, mesh=mesh)
 
 
 def fedsgd_train(loss_fn: Callable, init_params,
@@ -51,7 +52,8 @@ def fedsgd_train(loss_fn: Callable, init_params,
                  max_block: int = 512,
                  sampling: Optional[SamplingPolicy] = None,
                  pool: Optional[ClientPool] = None,
-                 buffered: Optional[BufferedAggregation] = None) -> Dict:
+                 buffered: Optional[BufferedAggregation] = None,
+                 mesh=None) -> Dict:
     """FedSGD: each client sends ONE gradient; server applies the mean
     (participation-weighted under a heterogeneity `sampling` policy)."""
     return run_federated(
@@ -60,4 +62,4 @@ def fedsgd_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling, pool=pool, buffered=buffered)
+        sampling=sampling, pool=pool, buffered=buffered, mesh=mesh)

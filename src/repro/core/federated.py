@@ -11,53 +11,42 @@ Two mappings of the paper's schema onto the production mesh:
 
 2. POD-CLIENT mode (here): each POD is one federated client. Inner SGD
    all-reduces stay WITHIN the pod (cheap intra-pod ICI); the pods'
-   pseudo-gradients (phi_hat - phi) are exchanged across the (slow)
-   pod axis ONCE per round — TinyReptile's communication thriftiness
-   expressed as a collective schedule: O(K) intra-pod collectives,
-   O(1) cross-pod collectives.
+   pseudo-gradients are exchanged across the (slow) pod axis ONCE per
+   round — TinyReptile's communication thriftiness expressed as a
+   collective schedule: O(K) intra-pod collectives, O(1) cross-pod
+   collectives.
 
-Pod-client mode uses shard_map manual over "pod" with GSPMD auto over
-("data","model") inside.
+Pod-client mode no longer hand-rolls the round: it is a thin
+CONFIGURATION of the round engine's building blocks — each pod runs
+``repro.core.engine.streaming_sgd`` (the engine's inner loop) on its own
+client stream, and the server fold is the strategies' collective
+aggregation hook (``reptile_aggregate_weighted(..., axis_name="pod")``:
+each pod contributes weight 1/n_pods and the weighted client mean
+all-reduces across the pod axis — exactly the masked-psum form the
+client-sharded engine uses over its "clients" axis, see
+``run_federated(mesh=...)``). shard_map (manual over "pod", GSPMD auto
+over ("data","model") inside) comes from the shared
+``repro.runtime.sharding.shard_map_compat``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.runtime.sharding import param_spec as param_spec_rule, _path_str
-
-
-def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes_names):
-    """Version-portable shard_map: manual over `manual_axes_names`, GSPMD
-    auto over every other mesh axis.
-
-    Newer JAX exposes ``jax.shard_map(..., axis_names=...)`` (manual axes
-    named directly); older releases only have
-    ``jax.experimental.shard_map.shard_map(..., auto=...)`` (auto axes
-    named, i.e. the complement). Resolve whichever exists.
-    """
-    manual = frozenset(manual_axes_names)
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False,
-                             axis_names=set(manual))
-    from jax.experimental.shard_map import shard_map as _shard_map
-    auto = frozenset(mesh.axis_names) - manual
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      check_rep=False, auto=auto)
+# re-exported: shard_map_compat historically lived here; it is now the
+# shared wrapper in repro.runtime.sharding (the round engine's
+# client-sharded block runner uses it too)
+from repro.runtime.sharding import shard_map_compat  # noqa: F401
 
 
 def make_pod_client_meta_step(model, mesh, *, beta: float = 0.01,
                               alpha: float = 0.5) -> Callable:
-    """TinyReptile round with pods as clients. batch: (K, mb, S) arrays
-    sharded over ("pod","data") on mb? No — each pod sees its OWN client
-    stream: batch leading dims (K, mb, ...) with mb sharded over
-    ("pod","data"); inside shard_map each pod gets mb/npods rows = its
-    client's stream."""
+    """TinyReptile round with pods as clients. batch leaves have leading
+    dims (K, mb, ...) with mb sharded over ("pod","data"); inside
+    shard_map each pod sees mb/n_pods rows = its OWN client stream."""
     if "pod" not in mesh.axis_names:
         raise ValueError("pod-client mode needs the multi-pod mesh")
 
@@ -69,50 +58,50 @@ def make_pod_client_meta_step(model, mesh, *, beta: float = 0.01,
     # numerics, just without intra-pod data parallelism.
     partial_auto = hasattr(jax, "shard_map")
     manual = ("pod",) if partial_auto else tuple(mesh.axis_names)
+    n_pods = mesh.shape["pod"]
 
-    def loss_of(phi, micro):
-        return model.loss_fn(phi, micro)
-
-    def round_body(phi, batch):
+    def round_body(phi, batch, alpha_t):
         # runs per-pod (manual over "pod"; auto over data/model);
         # internal constraints must not mention the manual axes
+        from repro.core.engine import streaming_sgd
+        from repro.core.strategies import reptile_aggregate_weighted
         from repro.runtime.shardctx import manual_axes
 
-        def inner(phi_hat, micro):
-            loss, g = jax.value_and_grad(loss_of)(phi_hat, micro)
-            # gradient all-reduce over the pod's OWN data section happens
-            # automatically via GSPMD (auto axes); only "pod" is manual.
-            phi_hat = jax.tree.map(
-                lambda p, gg: (p.astype(jnp.float32)
-                               - beta * gg.astype(jnp.float32)).astype(p.dtype),
-                phi_hat, g)
-            return phi_hat, loss
-
         with manual_axes(*manual):
-            phi_hat, losses = jax.lax.scan(inner, phi, batch)
-            # pseudo-gradient; cross-pod exchange happens ONCE here
-            delta = jax.tree.map(lambda q, p: q - p, phi_hat, phi)
-            delta = jax.tree.map(
-                lambda d: jax.lax.pmean(d, axis_name="pod"), delta)
-            new_phi = jax.tree.map(
-                lambda p, d: (p.astype(jnp.float32)
-                              + alpha * d.astype(jnp.float32)).astype(p.dtype),
-                phi, delta)
-            return new_phi, {"loss": jax.lax.pmean(losses.mean(), "pod")}
+            # the engine's inner loop: one SGD step per arriving
+            # microbatch, fp32 update math
+            phi_hat, losses = streaming_sgd(model.loss_fn, phi, batch,
+                                            beta)
+            # the engine's server fold: this pod is ONE client of the
+            # n_pods cohort (weight 1/n_pods); the weighted client mean
+            # all-reduces across "pod" — the O(1) cross-pod exchange
+            new_phi = reptile_aggregate_weighted(
+                phi, jax.tree.map(lambda q: q[None], phi_hat), alpha_t,
+                jnp.full((1,), 1.0 / n_pods, jnp.float32),
+                use_pallas=False, axis_name="pod")
+            loss = jax.lax.pmean(losses.mean(), "pod")
+            return new_phi, {"loss": loss,
+                             "inner_first": jax.lax.pmean(losses[0], "pod"),
+                             "inner_last": jax.lax.pmean(losses[-1], "pod")}
 
-    def step(phi, batch):
+    def step(phi, batch, alpha_t=None):
         # manual ONLY over "pod": params replicated across pods (each pod =
         # one client starting from the same phi), batch split per pod on
         # the microbatch dim. "data"/"model" stay auto (GSPMD shards them
-        # via the model's internal constraints).
+        # via the model's internal constraints). alpha_t optionally
+        # overrides the static server rate with a traced (annealed)
+        # scalar — launch/train.py's --mesh pod path.
+        if alpha_t is None:
+            alpha_t = jnp.float32(alpha)
         in_specs = (
             jax.tree.map(lambda x: P(), phi),
             jax.tree.map(lambda x: P(None, "pod"), batch),
+            P(),
         )
         out_specs = (jax.tree.map(lambda x: P(), phi), P())
         fn = shard_map_compat(
             round_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             manual_axes_names=set(manual))
-        return fn(phi, batch)
+        return fn(phi, batch, jnp.asarray(alpha_t, jnp.float32))
 
     return step

@@ -146,6 +146,28 @@ class BlockPrefetcher:
         self._thread.join(timeout=5.0)
 
 
+def block_shardings(mesh, axis: str, tree):
+    """NamedSharding staging tree for one padded block on a client mesh.
+
+    The prefetch producer's ``device_put`` target when the engine runs
+    mesh-sharded: every leaf with a client axis — schedule rows and
+    batch arrays, all shaped (padded rounds, clients, ...) — splits its
+    dim 1 over the ``axis`` mesh axis so each device receives exactly
+    its cohort shard (H2D staging of block N+1 still hides behind
+    device compute on block N); per-round vectors (validity, alpha,
+    round index) replicate. The cohort axis is already padded to a
+    multiple of the shard count by the engine.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def of(x):
+        spec = (PartitionSpec(None, axis) if np.ndim(x) >= 2
+                else PartitionSpec())
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(of, tree)
+
+
 def single_device_of(tree):
     """The one device every jax leaf of ``tree`` lives on, or None (plain
     NumPy leaves, sharded/multi-device trees, empty trees). Prefetch

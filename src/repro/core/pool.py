@@ -88,6 +88,13 @@ class PoolState:
                  prefix length). None when unbuffered.
     flushes:     () i32 — how many times the buffer flushed into phi.
                  None when unbuffered.
+
+    Mesh runs (run_federated(mesh=...)) use the SHARDED layout built by
+    ``ClientPool.init_state(shards=...)``: per-client arrays padded to a
+    multiple of the shard count and split over the "clients" mesh axis,
+    the buffer stored as per-shard slabs, and ``buf_count`` a (shards,)
+    array of local fill levels (the flush predicate reduces it with
+    psum). ``pool_state_specs`` names each field's PartitionSpec.
     """
     last_seen: object
     staleness: object
@@ -125,18 +132,38 @@ class BufferedAggregation:
     buffer_size + cohort - 1 updates), so the capacity is static and the
     flush is a single ``lax.cond`` inside the scan — no host round-trip.
 
+    ``flush_staleness`` makes the flush AVAILABILITY-AWARE: in a sparse
+    fleet (diurnal troughs, small cohorts) a count-only buffer can sit
+    on updates for many rounds, so the flush predicate additionally
+    fires whenever HOLDING the buffer one more round would let its
+    oldest update reach the staleness deadline — i.e. the buffer
+    flushes at the end of round r if ``r - min(buffered rounds) + 1 >=
+    flush_staleness`` (one extra comparison OR-ed into the existing
+    ``lax.cond`` predicate, still zero host round-trips). No buffered
+    update is ever applied with staleness >= flush_staleness, so a
+    deadline of 1 degenerates to flush-on-every-arrival (every update
+    applied the round it was computed, tau = 0).
+
     buffer_size:  flush threshold K, in client arrivals (>= 1).
     staleness_fn: traced discount tau -> weight; default FedBuff's
                   1/sqrt(1+tau). Must be a hashable callable (module
                   function or frozen partial) for the runner cache.
+    flush_staleness: optional staleness deadline (rounds, >= 1); None
+                  (default) keeps the count-only FedBuff flush.
     """
     buffer_size: int = 4
     staleness_fn: Callable = default_staleness_weight
+    flush_staleness: Optional[int] = None
 
     def __post_init__(self):
         if not (isinstance(self.buffer_size, int) and self.buffer_size >= 1):
             raise ValueError(f"buffer_size must be an int >= 1, got "
                              f"{self.buffer_size!r}")
+        if self.flush_staleness is not None and not (
+                isinstance(self.flush_staleness, int)
+                and self.flush_staleness >= 1):
+            raise ValueError(f"flush_staleness must be None or an int >= 1, "
+                             f"got {self.flush_staleness!r}")
 
 
 class ClientPool:
@@ -230,24 +257,63 @@ class ClientPool:
         return {"x": x, "y": y}
 
     def init_state(self, phi, cohort_size: int,
-                   buffered: Optional[BufferedAggregation] = None
-                   ) -> PoolState:
+                   buffered: Optional[BufferedAggregation] = None,
+                   shards: int = 1) -> PoolState:
         """Fresh device-resident pool state. The FedBuff buffer's static
         capacity is ``buffer_size + cohort_size - 1``: a flush triggers
         at count >= buffer_size, and at most cohort_size arrivals land
-        per round on top of a count of at most buffer_size - 1."""
-        n = self.size
+        per round on top of a count of at most buffer_size - 1.
+
+        ``shards`` > 1 builds the MESH layout (run_federated(mesh=...)):
+        the per-client arrays are padded to a multiple of ``shards`` so
+        the "clients" mesh axis splits them evenly (padded rows are
+        never indexed — cohort indices stay < pool size), and the
+        FedBuff buffer becomes per-shard: each shard owns a
+        ``buffer_size + local_cohort - 1`` slab (any one shard can hold
+        the whole count-threshold backlog plus its own round of
+        arrivals, since the flush predicate is on the psum-reduced
+        GLOBAL count), with ``buf_count`` a (shards,) array of local
+        fill levels. ``shards == 1`` is bit-for-bit the legacy layout
+        (scalar ``buf_count``, one contiguous buffer)."""
+        if cohort_size % max(shards, 1):
+            raise ValueError(f"cohort_size={cohort_size} must be a "
+                             f"multiple of shards={shards} (the engine "
+                             f"pads the cohort before building state)")
+        n = -(-self.size // shards) * shards        # ceil to shard multiple
         last_seen = jnp.full((n,), -1, jnp.int32)
         staleness = jnp.zeros((n,), jnp.int32)
         checkins = jnp.zeros((n,), jnp.int32)
         if buffered is None:
             return PoolState(last_seen, staleness, checkins)
-        cap = buffered.buffer_size + cohort_size - 1
+        if shards == 1:
+            cap = buffered.buffer_size + cohort_size - 1
+            buf_count = jnp.int32(0)
+        else:
+            cap = shards * (buffered.buffer_size
+                            + cohort_size // shards - 1)
+            buf_count = jnp.zeros((shards,), jnp.int32)
         buf = jax.tree.map(
             lambda p: jnp.zeros((cap,) + p.shape, p.dtype), phi)
         return PoolState(last_seen, staleness, checkins, buf,
-                         jnp.zeros((cap,), jnp.int32), jnp.int32(0),
+                         jnp.zeros((cap,), jnp.int32), buf_count,
                          jnp.int32(0))
+
+
+def pool_state_specs(state: PoolState, axis: str) -> PoolState:
+    """PartitionSpecs mirroring ``state`` for a client-sharded mesh run:
+    per-client arrays and the per-shard FedBuff slabs split over the
+    ``axis`` mesh axis, the flush counter replicated. Used both as the
+    block runner's shard_map in/out specs and (wrapped in
+    NamedSharding) as the host-side device_put target."""
+    from jax.sharding import PartitionSpec as P
+    sharded = P(axis)
+    return PoolState(
+        last_seen=sharded, staleness=sharded, checkins=sharded,
+        buf_updates=(None if state.buf_updates is None else
+                     jax.tree.map(lambda _: sharded, state.buf_updates)),
+        buf_round=None if state.buf_round is None else sharded,
+        buf_count=None if state.buf_count is None else sharded,
+        flushes=None if state.flushes is None else P())
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,7 +31,8 @@ def reptile_train(loss_fn: Callable, init_params,
                   max_block: int = 512,
                   sampling: Optional[SamplingPolicy] = None,
                   pool: Optional[ClientPool] = None,
-                  buffered: Optional[BufferedAggregation] = None) -> Dict:
+                  buffered: Optional[BufferedAggregation] = None,
+                  mesh=None) -> Dict:
     """clients_per_round == 1 -> serial Reptile; > 1 -> batched Reptile
     (server averages the per-client pseudo-gradients; requires concurrent
     connections to all sampled clients — the cost the paper calls out).
@@ -43,4 +44,4 @@ def reptile_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=anneal, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling, pool=pool, buffered=buffered)
+        sampling=sampling, pool=pool, buffered=buffered, mesh=mesh)

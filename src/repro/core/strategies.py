@@ -23,13 +23,21 @@ schedule-aware variants instead:
       TinyReptile, epochs for Reptile/FedAVG). The default ignores k —
       right for one-shot workloads (FedSGD's single gradient, Transfer's
       raw-batch forward) that have no straggler axis.
-  server_aggregate_weighted(phi, client_results, alpha_t, beta, weights)
+  server_aggregate_weighted(phi, client_results, alpha_t, beta, weights,
+                            axis_name=None)
       weights: (clients,) per-round-normalized aggregation weights
       (0 for non-participants) — partial participation, arrival-weighted
       straggler aggregation, AND FedBuff-style buffered flushes
       (repro.core.pool.BufferedAggregation: the buffered updates arrive
       with a leading buffer-capacity axis and staleness-discounted
       weights, zeros on empty slots) all reduce to this one hook.
+      ``axis_name`` is the COLLECTIVE form (mesh-sharded engine runs,
+      see run_federated(mesh=...)): client_results and weights then
+      carry only this device's cohort shard, and the hook must reduce
+      the weighted sum across the named mesh axis (``psum``) — routing
+      through ``weighted_client_mean(..., axis_name=...)`` gives that
+      for free. ``axis_name=None`` (the default, and the only form the
+      engine uses when mesh is None) is bit-for-bit the pre-mesh hook.
   local_step_budget(support) -> int
       The full per-client workload in scheduler units; scheduling
       policies draw each k_i from [1, budget].
@@ -49,7 +57,7 @@ from repro.core.meta import (finetune_batch, finetune_batch_masked,
                              finetune_online, finetune_online_masked)
 
 
-def weighted_client_mean(trees, weights):
+def weighted_client_mean(trees, weights, axis_name=None):
     """sum_c weights[c] * tree_c along the leading clients axis, in fp32.
     With per-round-normalized weights this is the participation-weighted
     client mean (uniform weights 1/C recover the plain mean).
@@ -57,12 +65,38 @@ def weighted_client_mean(trees, weights):
     Zero-weight clients are truly INERT: their results are zeroed before
     the sum, so a scheduled-out client whose hook still ran on its
     zeroed batch (one-shot strategies ignore local_steps) cannot poison
-    the round with a NaN/inf — 0 * NaN would otherwise be NaN."""
-    def wmean(q):
+    the round with a NaN/inf — 0 * NaN would otherwise be NaN.
+
+    ``axis_name`` is the collective form for mesh-sharded runs: the
+    leading axis then holds only this device's cohort shard (weights
+    likewise), and the local partial sum is all-reduced across the
+    named mesh axis. Because the weights are normalized over the FULL
+    cohort, psum of the per-shard partial sums IS the global weighted
+    mean. The per-leaf partials are flattened and concatenated into ONE
+    psum — XLA CPU (and most backends) execute each all-reduce as its
+    own synchronization, so a per-leaf psum would pay one cross-device
+    rendezvous per parameter tensor per round; bitwise the same sums
+    either way."""
+    def local_sum(q):
         qf = q.astype(jnp.float32)
         w = weights.reshape((-1,) + (1,) * (qf.ndim - 1))
         return jnp.sum(w * jnp.where(w > 0, qf, 0.0), axis=0)
-    return jax.tree.map(wmean, trees)
+    local = jax.tree.map(local_sum, trees)
+    if axis_name is None:
+        return local
+    leaves, treedef = jax.tree.flatten(local)
+    if not leaves:
+        return local
+    if len(leaves) == 1:
+        return jax.tree.unflatten(treedef,
+                                  [jax.lax.psum(leaves[0], axis_name)])
+    flat = jax.lax.psum(
+        jnp.concatenate([l.ravel() for l in leaves]), axis_name)
+    out, off = [], 0
+    for l in leaves:
+        out.append(flat[off:off + l.size].reshape(l.shape))
+        off += l.size
+    return jax.tree.unflatten(treedef, out)
 
 
 def reptile_aggregate(phi, phi_hats, alpha_t, *,
@@ -77,12 +111,14 @@ def reptile_aggregate(phi, phi_hats, alpha_t, *,
 
 
 def reptile_aggregate_weighted(phi, phi_hats, alpha_t, weights, *,
-                               use_pallas: Optional[bool] = None):
+                               use_pallas: Optional[bool] = None,
+                               axis_name=None):
     """Participation/arrival-weighted Reptile server update:
     phi <- phi + alpha_t * (sum_c w_c phi_hat_c - phi). Weights are the
     round's normalized ClientSchedule weights; zero-weight (scheduled
-    out) clients contribute nothing."""
-    mean = weighted_client_mean(phi_hats, weights)
+    out) clients contribute nothing. ``axis_name`` reduces the weighted
+    client mean across a mesh axis (sharded cohorts / pod clients)."""
+    mean = weighted_client_mean(phi_hats, weights, axis_name=axis_name)
     return meta_interpolate(phi, mean, alpha_t, use_pallas=use_pallas)
 
 
@@ -121,12 +157,13 @@ class FedStrategy:
         return self.client_update(phi, client_batch, beta)
 
     def server_aggregate_weighted(self, phi, client_results, alpha_t,
-                                  beta, weights):
+                                  beta, weights, axis_name=None):
         raise NotImplementedError(
             f"{type(self).__name__} does not implement weighted "
             "aggregation; define server_aggregate_weighted to run under "
             "scheduled sampling policies (partial participation / "
-            "stragglers)")
+            "stragglers) — accept axis_name=None too if the strategy "
+            "should run on a client-sharded mesh")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,10 +190,11 @@ class TinyReptileStrategy(FedStrategy):
                                  use_pallas=self.use_pallas)
 
     def server_aggregate_weighted(self, phi, client_results, alpha_t,
-                                  beta, weights):
+                                  beta, weights, axis_name=None):
         return reptile_aggregate_weighted(phi, client_results, alpha_t,
                                           weights,
-                                          use_pallas=self.use_pallas)
+                                          use_pallas=self.use_pallas,
+                                          axis_name=axis_name)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,10 +224,11 @@ class ReptileStrategy(FedStrategy):
                                  use_pallas=self.use_pallas)
 
     def server_aggregate_weighted(self, phi, client_results, alpha_t,
-                                  beta, weights):
+                                  beta, weights, axis_name=None):
         return reptile_aggregate_weighted(phi, client_results, alpha_t,
                                           weights,
-                                          use_pallas=self.use_pallas)
+                                          use_pallas=self.use_pallas,
+                                          axis_name=axis_name)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,9 +254,10 @@ class FedAvgStrategy(FedStrategy):
         return jax.tree.map(lambda q: q.sum(0) / n, client_results)
 
     def server_aggregate_weighted(self, phi, client_results, alpha_t,
-                                  beta, weights):
+                                  beta, weights, axis_name=None):
         """Weighted model average over the participating clients only."""
-        avg = weighted_client_mean(client_results, weights)
+        avg = weighted_client_mean(client_results, weights,
+                                   axis_name=axis_name)
         return jax.tree.map(lambda p, q: q.astype(p.dtype), phi, avg)
 
 
@@ -241,9 +281,10 @@ class FedSGDStrategy(FedStrategy):
             lambda p, g: p - beta * g.sum(0) / n, phi, client_results)
 
     def server_aggregate_weighted(self, phi, client_results, alpha_t,
-                                  beta, weights):
+                                  beta, weights, axis_name=None):
         """Apply the participation-weighted mean gradient."""
-        g = weighted_client_mean(client_results, weights)
+        g = weighted_client_mean(client_results, weights,
+                                 axis_name=axis_name)
         return jax.tree.map(
             lambda p, gg: (p - beta * gg).astype(p.dtype), phi, g)
 
@@ -270,13 +311,13 @@ class TransferStrategy(FedStrategy):
         return jax.tree.map(lambda w, gg: w - beta * gg, phi, g)
 
     def server_aggregate_weighted(self, phi, client_results, alpha_t,
-                                  beta, weights):
+                                  beta, weights, axis_name=None):
         """Per-client pool gradients, weighted — scheduled-out clients'
         (zeroed) batches get weight 0 instead of polluting the pool.
         Mathematically the pooled-gradient with client weights; not
         bitwise the unweighted pool (sum order differs)."""
         grads = jax.vmap(
             lambda b: jax.grad(self.loss_fn)(phi, b))(client_results)
-        g = weighted_client_mean(grads, weights)
+        g = weighted_client_mean(grads, weights, axis_name=axis_name)
         return jax.tree.map(
             lambda w, gg: (w - beta * gg).astype(w.dtype), phi, g)

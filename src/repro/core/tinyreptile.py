@@ -40,7 +40,8 @@ def tinyreptile_train(loss_fn: Callable, init_params,
                       clients_per_round: int = 1,
                       sampling: Optional[SamplingPolicy] = None,
                       pool: Optional[ClientPool] = None,
-                      buffered: Optional[BufferedAggregation] = None) -> Dict:
+                      buffered: Optional[BufferedAggregation] = None,
+                      mesh=None) -> Dict:
     """Returns {"params", "history", "comm_bytes", "per_client_bytes"};
     history rows are per-eval dicts. `prefetch`/`sampler`/`max_block`
     tune the engine's host/device pipeline; `sampling` plugs in a
@@ -54,4 +55,4 @@ def tinyreptile_train(loss_fn: Callable, init_params,
         beta=beta, support=support, anneal=anneal, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, channel=channel,
         prefetch=prefetch, sampler=sampler, max_block=max_block,
-        sampling=sampling, pool=pool, buffered=buffered)
+        sampling=sampling, pool=pool, buffered=buffered, mesh=mesh)

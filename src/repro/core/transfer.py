@@ -25,11 +25,13 @@ def transfer_train(loss_fn: Callable, init_params,
                    prefetch: int = 2, sampler: str = "reference",
                    max_block: int = 512,
                    sampling: Optional[SamplingPolicy] = None,
-                   pool: Optional[ClientPool] = None) -> Dict:
+                   pool: Optional[ClientPool] = None,
+                   mesh=None) -> Dict:
     per_task = max(batch_per_round // tasks_per_round, 1)
     return run_federated(
         init_params, task_dist, TransferStrategy(loss_fn),
         rounds=rounds, clients_per_round=tasks_per_round, alpha=0.0,
         beta=beta, support=per_task, anneal=False, seed=seed,
         eval_every=eval_every, eval_kwargs=eval_kwargs, prefetch=prefetch,
-        sampler=sampler, max_block=max_block, sampling=sampling, pool=pool)
+        sampler=sampler, max_block=max_block, sampling=sampling, pool=pool,
+        mesh=mesh)

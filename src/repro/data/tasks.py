@@ -147,6 +147,23 @@ class TaskDistribution:
                 v[off] = 0
         return block
 
+    @staticmethod
+    def _choice_block(rng: np.random.Generator, n: int, m: int,
+                      k: int) -> np.ndarray:
+        """``n`` independent without-replacement draws of ``k`` of ``m``
+        items as ONE vectorized operation: a single (n, m) uniform draw,
+        argsorted per row, first-k prefix taken — each row is a uniform
+        random permutation's prefix, i.e. exactly the distribution of a
+        per-task ``rng.choice(m, size=k, replace=False)`` loop, at one
+        rng draw and zero Python-level iterations. This replaced the
+        last per-task loops in the shipped vectorized block samplers
+        (PR-2 follow-up); it consumes the rng ONCE, as one (n, m)
+        uniform array, which is the documented block order."""
+        if k > m:
+            raise ValueError(f"cannot draw {k} of {m} without replacement")
+        u = rng.random((n, m))
+        return np.argsort(u, axis=1)[:, :k]
+
 
 class SineTasks(TaskDistribution):
     """f(x) = a sin(b x + c); a ~ U[0.1, 5], b ~ U[0.8, 1.2], c ~ U[0, pi]."""
@@ -242,15 +259,17 @@ class OmniglotTasks(TaskDistribution):
 
     def sample_support_block(self, rng, rounds, clients, support,
                              data_mode="batch", participation=None):
-        """Vectorized block. RNG order: per-task class subsets first (the
-        only remaining per-task loop — ``choice`` without replacement),
-        then labels, roll offsets, and noise each as one array draw. The
-        per-sample roll is a wrapped gather instead of ``np.roll``.
-        Scheduled-out ``participation`` slots are zeroed post-draw."""
+        """Vectorized block — no per-task Python loop left. RNG order:
+        ALL class subsets as one (n, num_classes) uniform draw
+        (``_choice_block``: per-row argsort prefix, the same
+        without-replacement distribution as the old per-task ``choice``
+        loop), then labels, roll offsets, and noise each as one array
+        draw. The per-sample roll is a wrapped gather instead of
+        ``np.roll``. Scheduled-out ``participation`` slots are zeroed
+        post-draw."""
         del data_mode
         n, side = rounds * clients, 28
-        classes = np.stack([rng.choice(self.num_classes, size=self.ways,
-                                       replace=False) for _ in range(n)])
+        classes = self._choice_block(rng, n, self.num_classes, self.ways)
         labels = rng.integers(self.ways, size=(n, support))
         shifts = rng.integers(-2, 3, size=(n, support, 2))
         noise = rng.normal(0, self.noise,
@@ -321,14 +340,15 @@ class KWSTasks(TaskDistribution):
 
     def sample_support_block(self, rng, rounds, clients, support,
                              data_mode="batch", participation=None):
-        """Vectorized block. RNG order: per-task keyword subsets first,
-        then labels, time shifts, amplitudes, and noise each as one array
-        draw; the time roll is a wrapped gather along the frame axis.
-        Scheduled-out ``participation`` slots are zeroed post-draw."""
+        """Vectorized block — no per-task Python loop left. RNG order:
+        ALL keyword subsets as one (n, num_words) uniform draw
+        (``_choice_block``), then labels, time shifts, amplitudes, and
+        noise each as one array draw; the time roll is a wrapped gather
+        along the frame axis. Scheduled-out ``participation`` slots are
+        zeroed post-draw."""
         del data_mode
         n, t, f = rounds * clients, 49, 10
-        words = np.stack([rng.choice(self.num_words, size=self.ways,
-                                     replace=False) for _ in range(n)])
+        words = self._choice_block(rng, n, self.num_words, self.ways)
         labels = rng.integers(self.ways, size=(n, support))
         shifts = rng.integers(-3, 4, size=(n, support))
         amps = rng.uniform(0.8, 1.2, size=(n, support))

@@ -15,8 +15,15 @@ On this CPU container use --reduced (the full configs are dry-run only):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --rounds 20 --seq 64 --batch 8 --k-inner 4
 
-On a real TPU pod the same entrypoint runs the full config under
-make_production_mesh() with the sharding rules from repro.runtime.sharding.
+``--mesh data --devices N`` shards the fused round over a 1-D data mesh
+(batch split across N devices, model GSPMD-sharded by the
+repro.runtime.sharding rules); ``--mesh pod`` instead makes every
+device ONE federated pod client (repro.core.federated pod-client mode:
+inner SGD per pod, one cross-pod all-reduce per round). Both work on
+CPU under XLA_FLAGS=--xla_force_host_platform_device_count=N. On a
+real TPU pod the same entrypoint runs the full config under
+make_production_mesh() with the sharding rules from
+repro.runtime.sharding.
 """
 from __future__ import annotations
 
@@ -94,6 +101,21 @@ def parse_args(argv=None):
                     help="FedBuff-style async server: apply buffered "
                          "client deltas only every K arrivals, "
                          "staleness-discounted")
+    ap.add_argument("--devices", type=positive_int_arg, default=None,
+                    help="use the first N jax devices (default: all "
+                         "when --mesh is set; CPU runs force host "
+                         "devices via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
+    ap.add_argument("--mesh", default="none",
+                    choices=("none", "data", "pod"),
+                    help="shard the round across devices: 'data' runs "
+                         "the fused cohort step on a 1-D data mesh "
+                         "(batch split, GSPMD-sharded model); 'pod' "
+                         "treats each device as one federated pod "
+                         "client (repro.core.federated pod-client "
+                         "mode: inner SGD per pod, one cross-pod "
+                         "all-reduce per round); 'none' (default) "
+                         "stays single-device")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -102,6 +124,12 @@ def parse_args(argv=None):
     if args.availability != "iid" and args.participation < 1.0:
         ap.error("--availability replaces the i.i.d. --participation "
                  "schedule; pass one or the other")
+    if args.mesh == "pod" and args.buffer_size:
+        ap.error("--mesh pod runs the fused pod-client round; FedBuff "
+                 "buffering (--buffer-size) needs the split inner/flush "
+                 "step — pass one or the other")
+    if args.devices is not None and args.mesh == "none":
+        ap.error("--devices only applies with --mesh data|pod")
     return args
 
 
@@ -151,9 +179,56 @@ def main():
     channel = CommChannel()
     round_bill = 2 * channel.payload_bytes(phi)     # downlink + uplink
 
-    step = jax.jit(make_meta_train_step(model, beta=args.beta,
-                                        alpha=args.alpha),
-                   donate_argnums=(0,))
+    # --mesh builds the device mesh the round runs on: 'data' shards the
+    # batch (GSPMD shards the model via repro.runtime.sharding rules),
+    # 'pod' makes every device one federated pod client
+    # (repro.core.federated pod-client mode). shardctx.mesh_context is
+    # entered for the whole loop so the model's internal constraints
+    # resolve at trace time; batch staging below device_puts with the
+    # matching NamedSharding instead of a bare single-device put.
+    mesh = None
+    batch_sharding = None
+    if args.mesh != "none":
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        devs = jax.devices()
+        n = args.devices or len(devs)
+        if n > len(devs):
+            raise SystemExit(f"--devices {n}: only {len(devs)} devices "
+                             f"visible (force host devices via XLA_FLAGS)")
+        if args.mesh == "data":
+            mesh = Mesh(np.array(devs[:n]), ("data",))
+            batch_axis = "data"
+        else:
+            mesh = Mesh(np.array(devs[:n]).reshape(n, 1), ("pod", "data"))
+            batch_axis = "pod"
+        mb = args.batch // args.k_inner
+        if mb % n:
+            raise SystemExit(f"--mesh {args.mesh}: the per-step "
+                             f"microbatch ({mb} = --batch/--k-inner) "
+                             f"must divide over {n} devices")
+
+        def batch_sharding(leaf_ndim):
+            return NamedSharding(mesh, PartitionSpec(
+                *([None, batch_axis] + [None] * (leaf_ndim - 2))))
+
+        phi = jax.device_put(phi, NamedSharding(mesh, PartitionSpec()))
+
+    from contextlib import ExitStack
+    from repro.runtime.shardctx import mesh_context
+    stack = ExitStack()
+    if mesh is not None:
+        stack.enter_context(mesh_context(mesh))
+
+    if args.mesh == "pod":
+        from repro.core.federated import make_pod_client_meta_step
+        step = jax.jit(make_pod_client_meta_step(model, mesh,
+                                                 beta=args.beta,
+                                                 alpha=args.alpha),
+                       donate_argnums=(0,))
+    else:
+        step = jax.jit(make_meta_train_step(model, beta=args.beta,
+                                            alpha=args.alpha),
+                       donate_argnums=(0,))
     # FedBuff mode splits the fused round: the inner stream runs
     # immediately, the server interpolation is deferred to the flush
     # (phi is NOT donated — the delta needs it)
@@ -205,7 +280,14 @@ def main():
                                  cfg.d_model)), np.float32)
         batch["tokens"] = raw["tokens"]
         batch["labels"] = raw["labels"]
-        batch = jax.device_put(microbatch(batch, args.k_inner), device)
+        batch = microbatch(batch, args.k_inner)
+        if batch_sharding is not None:
+            # mesh staging: split the microbatch dim across the mesh's
+            # batch axis instead of a bare single-device put
+            batch = jax.device_put(batch, jax.tree.map(
+                lambda a: batch_sharding(np.asarray(a).ndim), batch))
+        else:
+            batch = jax.device_put(batch, device)
         return rnd, client.zipf_a, float(alpha_sched(rnd)), batch
 
     staged = prefetch_batches(make_round_batch, args.rounds - start_round)
@@ -250,6 +332,7 @@ def main():
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, phi, args.rounds,
                         extra={"arch": args.arch})
+    stack.close()
 
 
 if __name__ == "__main__":

@@ -124,6 +124,31 @@ def test_skip_matrix_documented():
     assert skips == expected, skips ^ expected
 
 
+def test_train_launcher_mesh_flags():
+    """--mesh data/--mesh pod run the reduced launcher across forced
+    host devices end to end; --devices without --mesh and --mesh pod
+    with --buffer-size are parse-time errors."""
+    out = _run("""
+import json, subprocess, sys, os
+base = [sys.executable, "-m", "repro.launch.train", "--arch",
+        "tinyllama-1.1b", "--reduced", "--rounds", "2", "--seq", "32",
+        "--batch", "8", "--k-inner", "2"]
+env = dict(os.environ)
+for extra in (["--mesh", "data", "--devices", "4"], ["--mesh", "pod"]):
+    r = subprocess.run(base + extra, capture_output=True, text=True,
+                       env=env, timeout=400)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rows = [json.loads(l) for l in r.stdout.splitlines() if l.startswith("{")]
+    assert len(rows) == 2 and all("loss" in row for row in rows)
+for bad in (["--devices", "2"], ["--mesh", "pod", "--buffer-size", "2"]):
+    r = subprocess.run(base + bad, capture_output=True, text=True,
+                       env=env, timeout=120)
+    assert r.returncode != 0
+print("launcher mesh flags ok")
+""", devices=4)
+    assert "launcher mesh flags ok" in out
+
+
 def test_pod_client_meta_step():
     """Beyond-paper scale-out: pods as federated clients (shard_map manual
     over 'pod', auto over data/model). alpha=0 must be the identity."""

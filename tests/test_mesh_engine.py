@@ -1,0 +1,188 @@
+"""Multi-device execution of the mesh-sharded round engine (PR 5).
+
+Runs in SUBPROCESSES with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the test_launch.py pattern) so the forced host-device topology never
+leaks into the rest of the suite. Covers the tentpole contracts:
+
+- seeded 1-vs-8-device parity for all five strategies, including an
+  uneven cohort (padded to the shard multiple via the validity/
+  participation masks) — training trajectory, eval history, and the
+  exact integer transport bills;
+- pooled mesh runs: identity state (last_seen/staleness/checkins)
+  EXACTLY equal to the 1-device run, FedBuff buffered aggregation with
+  the per-shard buffer reduced across shards at flush, availability
+  processes, and per-client bills summed across shards;
+- one jit trace per (strategy, beta, channel, schedule-shape,
+  pool-shape, mesh) config across uneven eval blocks;
+- the runner cache under changed device topology: a 4-device and an
+  8-device mesh are distinct cache keys (a stale trace can never be
+  served), counted by runner_cache_stats()["mesh_entries"];
+- mesh argument resolution (int / "auto" / explicit Mesh) and
+  validation.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PRELUDE = """
+import functools
+import jax, numpy as np
+from repro.configs.paper_models import SINE_MLP
+from repro.core import (BufferedAggregation, ClientPool, CommChannel,
+                        DiurnalAvailability, PartialParticipation,
+                        UniformSampling, clear_runner_cache, client_mesh,
+                        run_federated, runner_cache_stats)
+from repro.core.engine import _block_runner
+from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,
+                                   ReptileStrategy, TinyReptileStrategy,
+                                   TransferStrategy)
+from repro.data import SineTasks
+from repro.models.paper_nets import init_paper_model, paper_model_loss
+
+LOSS = functools.partial(paper_model_loss, SINE_MLP)
+EVAL = dict(num_tasks=2, support=4, k_steps=2, lr=0.02, query=8)
+params = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
+dist = SineTasks()
+
+def assert_close(a, b, tol=3e-4):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=tol, atol=tol)
+"""
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + code],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=500)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_mesh_parity_all_five_strategies():
+    """1-device vs 8-device seeded parity for every strategy, with an
+    UNEVEN cohort (5 and 6 slots pad to 8); metered strategies must
+    agree on the exact integer transport bills, and every sharded
+    config must trace exactly once across uneven eval blocks."""
+    out = _run("""
+cases = [
+    (TinyReptileStrategy(LOSS, use_pallas=None), dict(clients_per_round=5)),
+    (ReptileStrategy(LOSS, epochs=2, use_pallas=None),
+     dict(clients_per_round=6)),
+    (FedAvgStrategy(LOSS, epochs=2), dict(clients_per_round=6)),
+    (FedSGDStrategy(LOSS), dict(clients_per_round=5)),
+    (TransferStrategy(LOSS), dict(clients_per_round=6)),
+]
+mesh = client_mesh(8)
+clear_runner_cache()
+for i, (strategy, kw) in enumerate(cases):
+    beta = 0.02 + 1e-4 * i
+    base = dict(rounds=7, beta=beta, support=6, seed=3, eval_every=3,
+                eval_kwargs=EVAL, **kw)
+    flat = run_federated(params, dist, strategy, **base)
+    shrd = run_federated(params, dist, strategy, mesh=mesh, **base)
+    assert_close(flat["params"], shrd["params"])
+    assert len(flat["history"]) == len(shrd["history"])
+    for fe, se in zip(flat["history"], shrd["history"]):
+        np.testing.assert_allclose(fe["query_loss"], se["query_loss"],
+                                   rtol=1e-3, atol=1e-4)
+    if strategy.meters_comm:
+        assert flat["comm_bytes"] == shrd["comm_bytes"]
+        assert flat["per_client_bytes"] == shrd["per_client_bytes"]
+        assert sum(shrd["per_client_bytes"]) == shrd["comm_bytes"]
+    runner = _block_runner(strategy, beta, CommChannel(), scheduled=True,
+                           mesh=mesh, masked=False)
+    assert runner.trace_count == 1, (type(strategy).__name__,
+                                     runner.trace_count)
+print("five-strategy parity ok")
+""")
+    assert "five-strategy parity ok" in out
+
+
+def test_mesh_pooled_buffered_and_availability():
+    """Pooled mesh runs: integer identity state exactly equals the
+    1-device run (the shard-local scatter is exact), FedBuff flush
+    counts/pending match (the per-shard buffer reduces across shards at
+    flush), availability troughs stay no-ops, and pooled bills sum
+    across shards to the total."""
+    out = _run("""
+S = TinyReptileStrategy(LOSS, use_pallas=None)
+mesh = client_mesh(8)
+kw = dict(rounds=11, beta=0.02, support=4, seed=6, eval_every=4,
+          eval_kwargs=EVAL, clients_per_round=3)
+
+# pool of 7 pads to 8 state rows; partial participation skips clients
+for case_kw in (dict(sampling=PartialParticipation(0.5)),
+                dict(buffered=BufferedAggregation(4)),
+                dict(buffered=BufferedAggregation(100, flush_staleness=2)),
+                dict(sampling=DiurnalAvailability(period=4))):
+    flat = run_federated(params, dist, S, pool=ClientPool(dist, 7),
+                         **case_kw, **kw)
+    shrd = run_federated(params, dist, S, pool=ClientPool(dist, 7),
+                         mesh=mesh, **case_kw, **kw)
+    for k in ("last_seen", "staleness", "checkins"):
+        np.testing.assert_array_equal(flat["pool_state"][k],
+                                      shrd["pool_state"][k])
+        assert len(shrd["pool_state"][k]) == 7   # pad rows sliced off
+    assert_close(flat["params"], shrd["params"])
+    assert flat["per_client_bytes"] == shrd["per_client_bytes"]
+    assert sum(shrd["per_client_bytes"]) == shrd["comm_bytes"]
+    if "buffered" in case_kw:
+        assert (flat["pool_state"]["flushes"]
+                == shrd["pool_state"]["flushes"])
+        assert (flat["pool_state"]["buffered_pending"]
+                == shrd["pool_state"]["buffered_pending"])
+print("pooled mesh parity ok")
+""")
+    assert "pooled mesh parity ok" in out
+
+
+def test_mesh_cache_topology_and_resolution():
+    """A runner traced for one device topology is never served for
+    another: 4- and 8-device meshes are distinct cache keys, counted by
+    mesh_entries and dropped by clear_runner_cache. mesh=int / "auto"
+    resolve through client_mesh; non-"clients" meshes are rejected."""
+    out = _run("""
+from jax.sharding import Mesh
+S = TinyReptileStrategy(LOSS, use_pallas=None)
+clear_runner_cache()
+r8 = _block_runner(S, 0.05, CommChannel(), scheduled=True,
+                   mesh=client_mesh(8))
+r4 = _block_runner(S, 0.05, CommChannel(), scheduled=True,
+                   mesh=client_mesh(4))
+assert r8 is not r4                       # changed topology: fresh trace
+assert runner_cache_stats()["mesh_entries"] == 2
+# an equal topology hits the same entry (Mesh hashes by devices+axes)
+assert _block_runner(S, 0.05, CommChannel(), scheduled=True,
+                     mesh=client_mesh(8)) is r8
+clear_runner_cache()
+assert runner_cache_stats()["mesh_entries"] == 0
+
+# resolution: int and "auto" build client meshes; results agree
+kw = dict(rounds=4, clients_per_round=4, beta=0.02, support=4, seed=1)
+a = run_federated(params, dist, S, mesh=4, **kw)
+b = run_federated(params, dist, S, mesh=client_mesh(4), **kw)
+assert_close(a["params"], b["params"], tol=0.0)   # same mesh: bitwise
+c = run_federated(params, dist, S, mesh="auto", **kw)
+for l in jax.tree.leaves(c["params"]):
+    assert np.isfinite(np.asarray(l)).all()
+try:
+    run_federated(params, dist, S, mesh=Mesh(np.array(jax.devices()),
+                                             ("data",)), **kw)
+    raise SystemExit("bad mesh accepted")
+except ValueError as e:
+    assert "clients" in str(e)
+try:
+    client_mesh(99)
+    raise SystemExit("too many devices accepted")
+except ValueError:
+    pass
+print("cache topology ok")
+""")
+    assert "cache topology ok" in out

@@ -198,6 +198,101 @@ def test_vectorized_block_matches_reference_contract(dist, ways):
     assert vec["y"].min() >= 0 and vec["y"].max() < ways
 
 
+def test_omniglot_vectorized_block_matches_scalar_block_order_loop():
+    """The fully-vectorized Omniglot sampler (no per-task Python loop
+    left) is bit-for-bit a scalar loop in the documented block RNG
+    order: one (n, num_classes) uniform draw argsorted per row for the
+    class subsets, then labels, roll offsets, and noise as one array
+    draw each, then the per-sample np.roll + noise math."""
+    from repro.data.tasks import _glyph_prototype
+    dist = OmniglotTasks(num_classes=12, ways=4, noise=0.1)
+    rounds, clients, support, side = 2, 3, 4, 28
+    n = rounds * clients
+    vec = dist.sample_support_block(np.random.default_rng(11), rounds,
+                                    clients, support)
+    rng = np.random.default_rng(11)
+    classes = np.argsort(rng.random((n, 12)), axis=1)[:, :4]
+    labels = rng.integers(4, size=(n, support))
+    shifts = rng.integers(-2, 3, size=(n, support, 2))
+    noise = rng.normal(0, 0.1, size=(n, support, side, side)).astype(
+        np.float32)
+    x = np.zeros((n, support, side, side, 1), np.float32)
+    for i in range(n):
+        for s in range(support):
+            proto = _glyph_prototype(int(classes[i, labels[i, s]]))
+            img = np.roll(proto, tuple(shifts[i, s]), axis=(0, 1))
+            x[i, s] = (img + noise[i, s])[..., None].astype(np.float32)
+    np.testing.assert_array_equal(
+        vec["x"], x.reshape(rounds, clients, support, side, side, 1))
+    np.testing.assert_array_equal(
+        vec["y"], labels.astype(np.int32).reshape(rounds, clients, support))
+
+
+def test_kws_vectorized_block_matches_scalar_block_order_loop():
+    """Same contract for the KWS sampler: one (n, num_words) uniform
+    draw for the keyword subsets, then labels / shifts / amplitudes /
+    noise as array draws, per-sample roll-scale-noise math bitwise."""
+    from repro.data.tasks import _kws_prototype
+    dist = KWSTasks(num_words=9, ways=3, noise=0.15)
+    rounds, clients, support, t, f = 2, 2, 5, 49, 10
+    n = rounds * clients
+    vec = dist.sample_support_block(np.random.default_rng(13), rounds,
+                                    clients, support)
+    rng = np.random.default_rng(13)
+    words = np.argsort(rng.random((n, 9)), axis=1)[:, :3]
+    labels = rng.integers(3, size=(n, support))
+    shifts = rng.integers(-3, 4, size=(n, support))
+    amps = rng.uniform(0.8, 1.2, size=(n, support))
+    noise = rng.normal(0, 0.15, size=(n, support, t, f)).astype(np.float32)
+    x = np.zeros((n, support, t, f, 1), np.float32)
+    for i in range(n):
+        for s in range(support):
+            proto = _kws_prototype(int(words[i, labels[i, s]]))
+            m = np.roll(proto, int(shifts[i, s]), axis=0)
+            x[i, s] = (m * amps[i, s] + noise[i, s])[..., None].astype(
+                np.float32)
+    np.testing.assert_array_equal(
+        vec["x"], x.reshape(rounds, clients, support, t, f, 1))
+    np.testing.assert_array_equal(
+        vec["y"], labels.astype(np.int32).reshape(rounds, clients, support))
+
+
+def test_choice_block_is_without_replacement_and_uniform():
+    """The vectorized subset draw: rows are distinct-entry subsets, and
+    with k == m every row is a full permutation (the argsort-of-uniform
+    construction); k > m is rejected."""
+    from repro.data.tasks import TaskDistribution
+    got = TaskDistribution._choice_block(np.random.default_rng(0), 64, 10, 4)
+    assert got.shape == (64, 4)
+    assert all(len(set(row)) == 4 for row in got)
+    perms = TaskDistribution._choice_block(np.random.default_rng(1), 32, 5, 5)
+    assert (np.sort(perms, axis=1) == np.arange(5)).all()
+    with pytest.raises(ValueError):
+        TaskDistribution._choice_block(np.random.default_rng(2), 4, 3, 5)
+
+
+@pytest.mark.parametrize("dist", [
+    OmniglotTasks(num_classes=20, ways=5),
+    KWSTasks(num_words=10, ways=4),
+])
+def test_vectorized_block_distribution_matches_reference(dist):
+    """Seeded distributional parity with sample_support_block_reference:
+    the vectorized block order draws different values for a given seed
+    (documented since PR 2) but must sample the SAME distribution —
+    pixel moments and label histograms agree over a large block."""
+    rounds, clients, support = 16, 4, 8
+    ref = dist.sample_support_block_reference(np.random.default_rng(3),
+                                              rounds, clients, support)
+    vec = dist.sample_support_block(np.random.default_rng(3), rounds,
+                                    clients, support)
+    np.testing.assert_allclose(vec["x"].mean(), ref["x"].mean(), atol=0.05)
+    np.testing.assert_allclose(vec["x"].std(), ref["x"].std(), atol=0.05)
+    ways = dist.ways
+    href = np.bincount(ref["y"].ravel(), minlength=ways) / ref["y"].size
+    hvec = np.bincount(vec["y"].ravel(), minlength=ways) / vec["y"].size
+    np.testing.assert_allclose(hvec, href, atol=0.1)
+
+
 def test_base_distribution_block_falls_back_to_reference():
     dist = SineTasks()
     ref = dist.sample_support_block_reference(np.random.default_rng(4),

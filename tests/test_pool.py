@@ -266,6 +266,61 @@ def test_fedbuff_staleness_discount_weights():
                                [4.0, 4.0], rtol=1e-6)  # 2/3*3 + 1/3*6
 
 
+def test_fedbuff_flush_staleness_deadline_of_one_degenerates(setup):
+    """Availability-aware FedBuff: flush_staleness=1 means no buffered
+    update may ever reach staleness 1, i.e. the buffer flushes every
+    round that has arrivals (tau = 0 at every flush) — identical to the
+    count-based flush-every-round run even with a huge count
+    threshold."""
+    params, dist = setup
+    kw = dict(rounds=8, beta=0.02, support=4, seed=5, clients_per_round=3,
+              eval_every=8, eval_kwargs=EVAL)
+    by_count = tinyreptile_train(LOSS, params, dist,
+                                 pool=ClientPool(dist, 6),
+                                 buffered=BufferedAggregation(3), **kw)
+    by_deadline = tinyreptile_train(
+        LOSS, params, dist, pool=ClientPool(dist, 6),
+        buffered=BufferedAggregation(100, flush_staleness=1), **kw)
+    assert by_deadline["pool_state"]["flushes"] == 8
+    assert by_deadline["pool_state"]["buffered_pending"] == 0
+    _assert_trees_close(by_count["params"], by_deadline["params"])
+    np.testing.assert_allclose(
+        by_count["history"][-1]["query_loss"],
+        by_deadline["history"][-1]["query_loss"], rtol=1e-4, atol=1e-5)
+
+
+def test_fedbuff_flush_staleness_bounds_buffer_age(setup):
+    """A count threshold the sparse fleet never reaches still flushes
+    under the staleness deadline: with a cohort of 1 and deadline 3,
+    the single arrival of round r is held through rounds r+1, r+2 and
+    applied before it would turn 3 rounds stale — one flush per 3
+    rounds, nothing pending at a multiple-of-3 horizon."""
+    params, dist = setup
+    out = tinyreptile_train(LOSS, params, dist, rounds=9, beta=0.02,
+                            support=4, seed=1, clients_per_round=1,
+                            pool=ClientPool(dist, 4),
+                            buffered=BufferedAggregation(
+                                100, flush_staleness=3))
+    assert out["pool_state"]["flushes"] == 3
+    assert out["pool_state"]["buffered_pending"] == 0
+    # the count-only control never flushes at all
+    held = tinyreptile_train(LOSS, params, dist, rounds=9, beta=0.02,
+                             support=4, seed=1, clients_per_round=1,
+                             pool=ClientPool(dist, 4),
+                             buffered=BufferedAggregation(100))
+    assert held["pool_state"]["flushes"] == 0
+    assert held["pool_state"]["buffered_pending"] == 9
+    _assert_trees_equal(held["params"], params)   # phi frozen, no flush
+
+
+def test_fedbuff_flush_staleness_validation():
+    with pytest.raises(ValueError, match="flush_staleness"):
+        BufferedAggregation(4, flush_staleness=0)
+    with pytest.raises(ValueError, match="flush_staleness"):
+        BufferedAggregation(4, flush_staleness=1.5)
+    assert BufferedAggregation(4, flush_staleness=2).flush_staleness == 2
+
+
 def test_fedbuff_validation(setup):
     params, dist = setup
     with pytest.raises(ValueError, match="pool="):
@@ -393,13 +448,14 @@ def test_pooled_runs_trace_once(setup):
     tinyreptile_train(LOSS, params, dist, pool=ClientPool(dist, 6), **kw)
     strat = TinyReptileStrategy(LOSS, use_pallas=None)
     pooled = _block_runner(strat, beta, CommChannel(), scheduled=True,
-                           pooled=True)
+                           pooled=True, masked=False)
     assert pooled.trace_count == 1
     # buffered configs are their own cached runner, also single-trace
     tinyreptile_train(LOSS, params, dist, pool=ClientPool(dist, 6),
                       buffered=BufferedAggregation(4), **kw)
     buffed = _block_runner(strat, beta, CommChannel(), scheduled=True,
-                           pooled=True, buffered=BufferedAggregation(4))
+                           pooled=True, buffered=BufferedAggregation(4),
+                           masked=False)
     assert buffed is not pooled
     assert buffed.trace_count == 1
     assert pooled.trace_count == 1       # untouched by the buffered run

@@ -512,7 +512,52 @@ def test_runner_cache_unhashable_counter_and_clear_idempotence(caplog):
     clear_runner_cache()
     stats = runner_cache_stats()
     assert stats == {"hits": 0, "misses": 0, "currsize": 0,
-                     "maxsize": 64, "unhashable_misses": 0}
+                     "maxsize": 64, "unhashable_misses": 0,
+                     "mesh_entries": 0}
+
+
+def test_runner_cache_accounts_mesh_entries():
+    """Mesh-keyed runners are their own cache entries (a sharded trace
+    must never serve a flat run or vice versa), are counted by
+    runner_cache_stats, and are dropped by clear_runner_cache. The
+    cross-topology half (a 4-device and an 8-device mesh never share a
+    trace) lives in tests/test_mesh_engine.py, which has the forced
+    multi-device process."""
+    from repro.core import client_mesh
+    clear_runner_cache()
+    s = TinyReptileStrategy(LOSS, use_pallas=None)
+    mesh = client_mesh(1)
+    flat = _block_runner(s, 0.06, CommChannel(), scheduled=True)
+    sharded = _block_runner(s, 0.06, CommChannel(), scheduled=True,
+                            mesh=mesh)
+    assert sharded is not flat
+    stats = runner_cache_stats()
+    assert stats["currsize"] == 2 and stats["mesh_entries"] == 1
+    # an equal mesh (same devices, same axis) hits the same entry:
+    # Mesh hashes by topology, not object identity
+    again = _block_runner(s, 0.06, CommChannel(), scheduled=True,
+                          mesh=client_mesh(1))
+    assert again is sharded
+    assert runner_cache_stats()["hits"] >= 1
+    clear_runner_cache()
+    assert runner_cache_stats()["mesh_entries"] == 0
+
+
+def test_mesh_runner_requires_collective_hook():
+    """A custom strategy whose server_aggregate_weighted lacks the
+    axis_name parameter gets a plugin-author-facing error at runner
+    construction, not a TypeError from inside the trace."""
+    from repro.core import client_mesh
+
+    @dataclasses.dataclass(frozen=True)
+    class OldHook(TinyReptileStrategy):
+        def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                      beta, weights):
+            return phi
+
+    with pytest.raises(ValueError, match="axis_name"):
+        _block_runner(OldHook(LOSS), 0.05, CommChannel(), scheduled=True,
+                      mesh=client_mesh(1))
 
 
 def test_scheduled_and_uniform_runners_cached_separately():
