@@ -20,6 +20,13 @@ check-ins, and FedBuff buffered aggregation (flush every 16 arrivals)
 — with the block runner's trace counters recorded to pin the
 one-jit-trace-per-config contract.
 
+An "int8_training" section (PR 6) benchmarks TIFeD integer-only local
+training (tifed_train: int8 DFA client epochs, native int8 uplinks,
+quantization-aware aggregation) against the fp32 batched-Reptile
+baseline at the SAME cohort/model/support/epochs. Floors: tifed
+pipelined rounds/sec >= 1.5x fp32 reptile pipelined, uplink bytes at
+the int8 rate (0.25x the fp32 bill), trace_count 1.
+
 A "mesh_scaling" section (PR 5) sweeps cohort size x device count for
 the client-sharded engine (run_federated(mesh=...)) on a wider sine
 MLP with a longer support stream, demonstrated on CPU CI under
@@ -57,12 +64,14 @@ from repro.configs.paper_models import SINE_MLP
 from repro.core import (BufferedAggregation, ClientPool, CommChannel,
                         DiurnalAvailability, PartialParticipation,
                         StragglerSampling, UniformSampling, client_mesh,
-                        reptile_train, tinyreptile_train)
+                        reptile_train, tifed_train, tinyreptile_train)
 from repro.core.engine import _block_runner
 from repro.core.meta import finetune_batch, finetune_online, tree_lerp
-from repro.core.strategies import ReptileStrategy, TinyReptileStrategy
+from repro.core.strategies import (ReptileStrategy, TifedStrategy,
+                                   TinyReptileStrategy)
 from repro.data import SineTasks
-from repro.models.paper_nets import init_paper_model, paper_model_loss
+from repro.models.paper_nets import (init_paper_model, paper_model_loss,
+                                     relu_mlp_loss)
 
 LOSS = functools.partial(paper_model_loss, SINE_MLP)
 ROUNDS = 120
@@ -293,6 +302,43 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
         rows.append((f"engine/{name}_engine_pipelined", 1e6 / piped_rps,
                      f"rounds_per_sec={piped_rps:.1f} "
                      f"pipeline_speedup={pipeline_speedup:.2f}x"))
+
+    # -- int8 training: TIFeD integer DFA vs the fp32 reptile baseline --
+    # Same cohort (8), model (SINE_MLP shapes), support, and epoch count
+    # as reptile_batched_c8 — the matched-workload ratio the PR-6
+    # acceptance floor (>= 1.5x) is judged on. The bytes ratio pins the
+    # native int8 uplink bill against the analytic fp32 bill for the
+    # same traffic (2 * C * rounds * fp32 payload): exactly 0.25.
+    int8_ch = CommChannel("int8", quantize=False)
+
+    def tifed_fn(kw):
+        return tifed_train(params, dist, rounds=rounds, alpha=1.0,
+                           support=SUPPORT, epochs=8, clients_per_round=8,
+                           seed=0, channel=int8_ch, **kw)
+    # sync and piped use different block shapes, so each config traces
+    # once on the shared cached runner; pin the piped config's count as
+    # a delta (1 = retrace-free across its repeated timed runs)
+    runner = _block_runner(TifedStrategy(relu_mlp_loss, epochs=8), 0.0,
+                           int8_ch, scheduled=False)
+    t_sync = _rounds_per_sec(lambda: synced(tifed_fn, sync), rounds)
+    traces_before = runner.trace_count
+    t_piped = _rounds_per_sec(lambda: synced(tifed_fn, piped), rounds)
+    out = tifed_fn(piped)
+    fp32_rps = results["reptile_batched_c8"]["engine_pipelined_rounds_per_sec"]
+    fp32_bytes = 2 * 8 * rounds * CommChannel().payload_bytes(params)
+    results["int8_training"] = {
+        "engine_sync_rounds_per_sec": round(t_sync, 2),
+        "engine_pipelined_rounds_per_sec": round(t_piped, 2),
+        "pipeline_speedup": round(t_piped / t_sync, 2),
+        "vs_fp32_reptile": round(t_piped / fp32_rps, 2),
+        "comm_bytes": out["comm_bytes"],
+        "bytes_vs_fp32": round(out["comm_bytes"] / fp32_bytes, 3),
+        "trace_count": runner.trace_count - traces_before,
+    }
+    rows.append(("engine/int8_tifed_pipelined", 1e6 / t_piped,
+                 f"rounds_per_sec={t_piped:.1f} "
+                 f"vs_fp32_reptile={t_piped / fp32_rps:.2f}x "
+                 f"bytes_vs_fp32={out['comm_bytes'] / fp32_bytes:.3f}"))
 
     # -- heterogeneity: the ClientSchedule layer on the batched cohort --
     cohorts = [

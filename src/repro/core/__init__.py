@@ -57,6 +57,8 @@ from repro.core.meta import evaluate_init, finetune_batch, finetune_online  # no
 from repro.core.reptile import reptile_train  # noqa: F401
 from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,  # noqa: F401
                                    FedStrategy, ReptileStrategy,
-                                   TinyReptileStrategy, TransferStrategy)
+                                   TifedStrategy, TinyReptileStrategy,
+                                   TransferStrategy)
+from repro.core.tifed import tifed_train  # noqa: F401
 from repro.core.tinyreptile import tinyreptile_train  # noqa: F401
 from repro.core.transfer import transfer_train  # noqa: F401

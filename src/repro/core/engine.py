@@ -1130,6 +1130,17 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         raise ValueError(f"pool of {pool.size} clients cannot seat a "
                          f"cohort of {clients_per_round} (identities are "
                          f"unique within a round)")
+    payload_dtype = getattr(strategy, "payload_dtype", "float32")
+    if payload_dtype != "float32" and (channel.simulates_quantization
+                                       or channel.dtype != payload_dtype):
+        raise ValueError(
+            f"{type(strategy).__name__} uplinks NATIVE {payload_dtype} "
+            f"result trees (payload_dtype={payload_dtype!r}): the channel "
+            f"must bill at that wire rate and must not re-simulate "
+            f"quantization on already-quantized payloads — pass "
+            f"CommChannel({payload_dtype!r}, quantize=False), got "
+            f"{type(channel).__name__}(dtype={channel.dtype!r}, "
+            f"simulates_quantization={channel.simulates_quantization})")
     mesh = _resolve_mesh(mesh)
     shards = int(mesh.devices.size) if mesh is not None else 1
     # mesh runs pad the cohort to a multiple of the shard count: the
@@ -1157,8 +1168,14 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     run_block = _block_runner(strategy, beta, channel, scheduled,
                               pooled=pooled, buffered=buffered, mesh=mesh,
                               masked=masked)
-    pool_state = (pool.init_state(phi, c_pad, buffered, shards=shards)
-                  if pooled else None)
+    # FedBuff buffers stage whatever the strategy uplinks — sized from
+    # its template so quantized strategies buffer int8 trees at int8
+    # width, never dequantized copies
+    uplink_template = getattr(strategy, "uplink_template", None)
+    pool_state = (pool.init_state(
+        phi, c_pad, buffered, shards=shards,
+        template=uplink_template(phi) if uplink_template else None)
+        if pooled else None)
     if mesh is not None and pooled:
         pool_state = jax.device_put(
             pool_state,

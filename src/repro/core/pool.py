@@ -258,11 +258,16 @@ class ClientPool:
 
     def init_state(self, phi, cohort_size: int,
                    buffered: Optional[BufferedAggregation] = None,
-                   shards: int = 1) -> PoolState:
+                   shards: int = 1, template=None) -> PoolState:
         """Fresh device-resident pool state. The FedBuff buffer's static
         capacity is ``buffer_size + cohort_size - 1``: a flush triggers
         at count >= buffer_size, and at most cohort_size arrivals land
         per round on top of a count of at most buffer_size - 1.
+
+        ``template`` (default phi) gives the SHAPES/DTYPES of the
+        buffer slots — the strategy's uplink tree
+        (``FedStrategy.uplink_template``), so quantized strategies
+        stage their native int8 result trees at int8 width.
 
         ``shards`` > 1 builds the MESH layout (run_federated(mesh=...)):
         the per-client arrays are padded to a multiple of ``shards`` so
@@ -293,7 +298,8 @@ class ClientPool:
                             + cohort_size // shards - 1)
             buf_count = jnp.zeros((shards,), jnp.int32)
         buf = jax.tree.map(
-            lambda p: jnp.zeros((cap,) + p.shape, p.dtype), phi)
+            lambda p: jnp.zeros((cap,) + p.shape, p.dtype),
+            phi if template is None else template)
         return PoolState(last_seen, staleness, checkins, buf,
                          jnp.zeros((cap,), jnp.int32), buf_count,
                          jnp.int32(0))

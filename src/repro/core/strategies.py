@@ -47,14 +47,17 @@ A new algorithm is one strategy object — not a new file-long loop.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import meta_interpolate
 from repro.core.meta import (finetune_batch, finetune_batch_masked,
                              finetune_online, finetune_online_masked)
+from repro.kernels import ref as kref
 
 
 def weighted_client_mean(trees, weights, axis_name=None):
@@ -136,6 +139,24 @@ class FedStrategy:
     #                              uplinks), "zeros" (gradient uplinks),
     #                              or "none" (no reference; transmit the
     #                              result tree as-is)
+    payload_dtype = "float32"    # wire dtype of the client result tree.
+    #                              "float32" (default) leaves transport
+    #                              simulation to the CommChannel;
+    #                              anything else declares NATIVE
+    #                              quantized uplinks — the engine then
+    #                              requires a matching non-simulating
+    #                              channel (e.g. CommChannel("int8",
+    #                              quantize=False)) so bytes are billed
+    #                              at the true rate and the channel never
+    #                              re-quantizes already-integer payloads
+
+    def uplink_template(self, phi):
+        """A zero-cost template tree with the SHAPES/DTYPES of this
+        strategy's client result (what client_update returns), given the
+        broadcast phi. The engine sizes FedBuff buffer slabs from it, so
+        quantized strategies stage int8 updates at int8 width. Default:
+        phi itself (model- and gradient-shaped uplinks)."""
+        return phi
 
     def client_update(self, phi, client_batch, beta):
         raise NotImplementedError
@@ -321,3 +342,242 @@ class TransferStrategy(FedStrategy):
         g = weighted_client_mean(grads, weights, axis_name=axis_name)
         return jax.tree.map(
             lambda w, gg: (w - beta * gg).astype(w.dtype), phi, g)
+
+
+# ---------------------------------------------------------------------------
+# TIFeD: integer-only local training with direct feedback alignment
+# ---------------------------------------------------------------------------
+
+# Static exponent policy (powers of two throughout, so every requant
+# multiplier is an exact fp32 scaling and quantization error is pure
+# rounding): inputs land on the 2^EX grid (sine x in [-5, 5] fits int8
+# at 2^-4 — the MCU-realistic a-priori input scale), hidden activations
+# on 2^ACT as unsigned 7-bit, and the quantized error SERR grid-steps
+# below the output accumulator. Weight exponents are tracked per tensor
+# (kref.pow2_exponent); biases live at accumulator scale (int32,
+# clipped to +-2^23 so downstream products stay fp32-exact).
+TIFED_EX = -4
+TIFED_ACT = -3
+TIFED_SERR = -5
+
+
+@functools.lru_cache(maxsize=32)
+def _tifed_constants(seed, epochs, dims):
+    """Fixed DFA feedback matrices + per-epoch stochastic-rounding
+    dither planes, as NumPy so they bake into the jit trace as
+    constants — stochastic rounding at zero runtime cost. The dither is
+    shared across the round's clients (it is a fresh draw per epoch and
+    per weight entry, so each client's requantization stays unbiased;
+    clients are not mutually decorrelated — documented in
+    docs/PLUGINS.md §6)."""
+    din, h1, h2, dout = dims
+    npr = np.random.default_rng(seed)
+    fb = tuple(np.asarray(npr.integers(-127, 128, (dout, h)), np.float32)
+               for h in (h1, h2))
+    dith = tuple(np.asarray(npr.random((epochs, a, b)), np.float32)
+                 for a, b in ((din, h1), (h1, h2), (h2, dout)))
+    return fb, dith
+
+
+def tifed_dequantize(result):
+    """Client result tree -> fp32 params: q * 2^exp per leaf (weight
+    leaves carry their per-tensor exponent, biases their accumulator
+    scale)."""
+    out = {}
+    for k, q in result["q"].items():
+        e = result["exp"][k].astype(jnp.float32)
+        out[k] = q.astype(jnp.float32) * jnp.exp2(
+            e.reshape(e.shape + (1,) * (q.ndim - e.ndim)))
+    return out
+
+
+def tifed_requantize(phi):
+    """Snap fp32 phi back onto the integer grids (weights to their
+    per-tensor int8 grid, biases to the matching accumulator grid), so
+    the phi the scan carries is always exactly representable — the
+    value every client would reconstruct from an int8 broadcast."""
+    out = {}
+    for i, ea in enumerate((TIFED_EX, TIFED_ACT, TIFED_ACT)):
+        q, e = kref.quantize_pow2(phi[f"w{i}"])
+        ef = e.astype(jnp.float32)
+        out[f"w{i}"] = q * jnp.exp2(ef)
+        eb = ef + ea
+        out[f"b{i}"] = jnp.clip(
+            jnp.round(phi[f"b{i}"] * jnp.exp2(-eb)),
+            -kref.BIAS_MAX, kref.BIAS_MAX) * jnp.exp2(eb)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TifedStrategy(FedStrategy):
+    """TIFeD [arXiv 2307.03102]: integer-only local training with direct
+    feedback alignment, as a first-class engine strategy.
+
+    Clients never touch fp32 weights: phi is quantized to per-tensor
+    power-of-two int8 grids, and each local epoch runs an int8 forward
+    pass with int32 accumulation, projects the quantized output error
+    straight to one layer through a fixed random feedback matrix (no
+    backprop transposes), and requantizes that layer's update to int8
+    with stochastic rounding (the layer-cyclic single-layer variant:
+    epoch t trains layer t mod 3). Learning rates are pure bit-shifts —
+    ``lr_shift`` plus log2(support) folds the batch mean in.
+
+    The uplink is the NATIVE int8/int32 result tree
+    ``{"q": {w*, b*}, "exp": {w*, b*}}`` (payload_dtype="int8" — the
+    engine bills it at 1 byte/param through a non-simulating
+    CommChannel("int8", quantize=False); the six scalar exponents ride
+    free like PartialCommChannel's chunk-index side channel). The
+    server dequantizes, takes the weighted client mean in the same
+    single fused psum as every other strategy, Reptile-interpolates,
+    and snaps phi back onto the integer grid — so int8 runs keep both
+    engine invariants and compose with pool/FedBuff/mesh/schedules
+    unchanged.
+
+    ``loss_fn`` is only used by the engine's fp32 eval finetune (use
+    ``models.paper_nets.relu_mlp_loss``: the integer forward is a ReLU
+    MLP, not the tanh paper net). Eval finetune rates above ~0.01
+    diverge on the ReLU net at k_steps >= 16; the tifed_train wrapper
+    defaults accordingly. ``use_pallas`` routes each epoch through the
+    fused ``kernels/online_sgd_int8.py`` kernel (None = TPU only; CPU
+    uses the oracle math, which XLA fuses at the floor)."""
+    epochs: int = 8
+    lr_shift: int = 6
+    feedback_seed: int = 0
+    unroll: int = 2
+    use_pallas: Optional[bool] = None
+
+    tracks_inner_loss = True
+    payload_dtype = "int8"
+
+    @staticmethod
+    def _dims(phi):
+        for i in range(3):
+            if f"w{i}" not in phi or f"b{i}" not in phi:
+                raise ValueError(
+                    "TifedStrategy expects the paper MLP pytree "
+                    "{w0,b0,w1,b1,w2,b2} (models.paper_nets); got keys "
+                    f"{sorted(phi)}")
+        return (phi["w0"].shape[0], phi["w0"].shape[1],
+                phi["w1"].shape[1], phi["w2"].shape[1])
+
+    def uplink_template(self, phi):
+        self._dims(phi)
+        q = {f"w{i}": jnp.zeros(phi[f"w{i}"].shape, jnp.int8)
+             for i in range(3)}
+        q.update({f"b{i}": jnp.zeros(phi[f"b{i}"].shape, jnp.int32)
+                  for i in range(3)})
+        return {"q": q, "exp": {k: jnp.zeros((), jnp.int32) for k in q}}
+
+    def _run_epochs(self, phi, client_batch, k):
+        dims = self._dims(phi)
+        x = client_batch["x"].reshape(-1, dims[0])
+        y = client_batch["y"].reshape(x.shape[0], dims[3])
+        n = x.shape[0]
+        # fold the 1/n batch mean into the shift (exact for pow2 n)
+        lrs = self.lr_shift + int(np.floor(np.log2(n)))
+        fb_np, dith_np = _tifed_constants(self.feedback_seed, self.epochs,
+                                          dims)
+        fb = tuple(jnp.asarray(f) for f in fb_np)
+        dith = tuple(jnp.asarray(d) for d in dith_np)
+
+        f32 = jnp.float32
+        ws, ew = [], []
+        for i in range(3):
+            q, e = kref.quantize_pow2(phi[f"w{i}"])
+            ws.append(q)
+            ew.append(e)
+        ea = (TIFED_EX, TIFED_ACT, TIFED_ACT)
+        sacc = [ew[i] + ea[i] for i in range(3)]
+        bs = [jnp.clip(jnp.round(phi[f"b{i}"]
+                                 * jnp.exp2(-sacc[i].astype(f32))),
+                       -kref.BIAS_MAX, kref.BIAS_MAX) for i in range(3)]
+        xq = jnp.clip(jnp.round(x * 2.0 ** -TIFED_EX), -127.0, 127.0)
+        yal = jnp.round(y * jnp.exp2(-sacc[2].astype(f32)))
+        scales = {
+            "f0": jnp.exp2((sacc[0] - TIFED_ACT).astype(f32)),
+            "f1": jnp.exp2((sacc[1] - TIFED_ACT).astype(f32)),
+            "fe": jnp.exp2((sacc[2] - TIFED_SERR).astype(f32)),
+            "floss": jnp.exp2(2.0 * sacc[2].astype(f32)) / n,
+            "ftw": tuple(
+                jnp.exp2((ea[i] + TIFED_SERR - ew[i] - lrs).astype(f32))
+                for i in range(3)),
+            "ftb": tuple(
+                jnp.exp2((TIFED_SERR - sacc[i] - lrs).astype(f32))
+                for i in range(3)),
+        }
+        use_pallas = (jax.default_backend() == "tpu"
+                      if self.use_pallas is None else self.use_pallas)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            epoch_fn = kops.dfa_epoch_int8
+            init = (tuple(w.astype(jnp.int8) for w in ws),
+                    tuple(b.astype(jnp.int32) for b in bs))
+            xq_n, yal_n = xq.astype(jnp.int8), yal.astype(jnp.int32)
+        else:
+            epoch_fn = kref.dfa_int8_epoch
+            init = (tuple(ws), tuple(bs))
+            xq_n, yal_n = xq, yal
+
+        def run_one(carry, layer, dither):
+            cw, cb = carry
+            nw, nb, loss = epoch_fn(cw, cb, xq_n, yal_n, layer, fb,
+                                    dither, scales)
+            return (nw, nb), loss
+
+        def epoch(carry, xs):
+            if k is None:
+                layer, d0, d1, d2 = xs
+                return run_one(carry, layer, (d0, d1, d2))
+            idx, layer, d0, d1, d2 = xs
+            return jax.lax.cond(
+                idx < k,
+                lambda c: run_one(c, layer, (d0, d1, d2)),
+                lambda c: (c, jnp.float32(0.0)), carry)
+
+        layers = jnp.arange(self.epochs, dtype=jnp.int32) % 3
+        xs = (layers,) + dith
+        if k is not None:
+            xs = (jnp.arange(self.epochs, dtype=jnp.int32),) + xs
+        (cw, cb), losses = jax.lax.scan(epoch, init, xs,
+                                        unroll=self.unroll)
+        result = {
+            "q": {"w0": cw[0].astype(jnp.int8),
+                  "w1": cw[1].astype(jnp.int8),
+                  "w2": cw[2].astype(jnp.int8),
+                  "b0": cb[0].astype(jnp.int32),
+                  "b1": cb[1].astype(jnp.int32),
+                  "b2": cb[2].astype(jnp.int32)},
+            "exp": {"w0": ew[0], "w1": ew[1], "w2": ew[2],
+                    "b0": sacc[0], "b1": sacc[1], "b2": sacc[2]},
+        }
+        return result, losses
+
+    def client_update(self, phi, client_batch, beta):
+        del beta                      # learning rate is the bit-shift
+        return self._run_epochs(phi, client_batch, None)
+
+    def local_step_budget(self, support):
+        return self.epochs
+
+    def client_update_steps(self, phi, client_batch, beta, k):
+        """Straggler clients complete only their first k integer epochs
+        (masked epochs pass the carry through and report loss 0, which
+        the engine's weighted round loss expects)."""
+        del beta
+        return self._run_epochs(phi, client_batch, k)
+
+    def server_aggregate(self, phi, client_results, alpha_t, beta):
+        deq = jax.vmap(tifed_dequantize)(client_results)
+        mean = jax.tree.map(lambda q: jnp.mean(q, axis=0), deq)
+        return tifed_requantize(meta_interpolate(phi, mean, alpha_t))
+
+    def server_aggregate_weighted(self, phi, client_results, alpha_t,
+                                  beta, weights, axis_name=None):
+        """Quantization-aware weighted aggregation: dequantize each
+        client's int8 tree, weighted-mean in the SAME single fused psum
+        as the fp32 strategies (the dequantized leaves concatenate into
+        weighted_client_mean's one all-reduce), Reptile-interpolate,
+        requantize phi back onto the integer grid."""
+        deq = jax.vmap(tifed_dequantize)(client_results)
+        mean = weighted_client_mean(deq, weights, axis_name=axis_name)
+        return tifed_requantize(meta_interpolate(phi, mean, alpha_t))

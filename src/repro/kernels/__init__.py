@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Current kernels: meta_update (Reptile server interpolation),
+# online_sgd (streaming finetune), online_sgd_int8 (fused int8 TIFeD
+# DFA epoch), flash_decode, ssd_scan. Each has a pure-jnp oracle in
+# ref.py and a public wrapper in ops.py.

@@ -74,3 +74,14 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, window=0,
 def ssd_scan(xd, dA, Bm, Cm):
     from repro.kernels.ssd_scan import ssd_scan as _ssd
     return _ssd(xd, dA, Bm, Cm)
+
+
+def dfa_epoch_int8(ws, bs, xq, yal, layer, fb, dither, scales):
+    """Fused int8 TIFeD epoch (DFA forward + single-layer update).
+
+    Native int8/int32 contract — no (rows, LANE) retiling: the kernel
+    takes the paper MLP's tensors as whole-array blocks. The oracle is
+    ``ref.dfa_int8_epoch`` (fp32-exact integers, exact-equality tests).
+    """
+    from repro.kernels.online_sgd_int8 import dfa_epoch_int8 as _dfa
+    return _dfa(ws, bs, xq, yal, layer, fb, dither, scales)

@@ -39,6 +39,130 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, window=0):
     return out.reshape(B, H, hd)
 
 
+# ---------------------------------------------------------------------------
+# TIFeD integer DFA (oracle for kernels/online_sgd_int8.py)
+# ---------------------------------------------------------------------------
+#
+# The reference carries every integer quantity in fp32 arrays holding
+# EXACT integer values: all intermediates stay below 2^24 (activations
+# <= 127, int8 x int8 dot over S <= 512 samples peaks around 8.3e6), so
+# fp32 arithmetic on them is bit-exact against the kernel's native
+# int8/int32 arithmetic. That makes the parity tests exact-equality,
+# not allclose.
+
+INT8_MAX = 127.0
+BIAS_MAX = 2.0 ** 23          # biases live at accumulator scale, int32-safe
+DFA_SHIFT = 7                 # feedback projections are scaled by 2^-7
+_DN = (((0,), (0,)), ((), ()))   # contract the sample axis; vmap batches
+
+
+def pow2_exponent(maxabs, limit=INT8_MAX):
+    """Smallest power-of-two exponent e with maxabs * 2^-e <= limit.
+
+    The ceil/log2 form can land one short of the true ceiling when
+    maxabs/limit sits exactly on a power of two boundary in fp32, so a
+    single correction step nudges it up; the floor of -24 keeps
+    all-zero tensors on a sane grid."""
+    e = jnp.ceil(jnp.log2(jnp.maximum(maxabs, 1e-30) / limit))
+    e = jnp.where(maxabs * jnp.exp2(-e) > limit, e + 1, e)
+    return jnp.maximum(e, -24).astype(jnp.int32)
+
+
+def quantize_pow2(w, limit=INT8_MAX):
+    """Per-tensor power-of-two symmetric quantization.
+
+    Returns (q, e): the int-valued fp32 code array in [-limit, limit]
+    and the int32 exponent with w ~= q * 2^e."""
+    e = pow2_exponent(jnp.max(jnp.abs(w)), limit)
+    q = jnp.clip(jnp.round(w * jnp.exp2(-e.astype(jnp.float32))),
+                 -limit, limit)
+    return q, e
+
+
+def stochastic_round(v, dither):
+    """Unbiased stochastic rounding: floor(v + u) with u ~ U[0, 1).
+
+    The dither plane is supplied by the caller (baked trace constants in
+    the tifed strategy) so the operation itself is deterministic."""
+    return jnp.floor(v + dither)
+
+
+def dfa_int8_epoch(ws, bs, xq, yal, layer, fb, dither, scales):
+    """One TIFeD epoch: int8 forward + single-layer DFA update.
+
+    The layer-cyclic single-layer variant of TIFeD: each epoch runs the
+    full integer forward pass but updates only ``layer`` (0, 1, or 2),
+    selected at runtime by lax.switch so the scan over epochs stays one
+    trace. Direct feedback alignment replaces the backprop transposes
+    with fixed random matrices ``fb``; weight requantization uses
+    stochastic rounding driven by ``dither``.
+
+    All arrays are fp32 carrying exact integers (see module comment):
+
+      ws:     (w0 (din,H1), w1 (H1,H2), w2 (H2,dout)) int8-valued
+      bs:     (b0, b1, b2) int32-valued, at accumulator scale
+      xq:     (S, din) int8-valued quantized inputs
+      yal:    (S, dout) targets pre-scaled to the output accumulator grid
+      layer:  int32 scalar in {0, 1, 2} — which layer trains this epoch
+      fb:     (fb1 (dout,H1), fb2 (dout,H2)) int8-valued feedback
+      dither: (d0 (din,H1), d1 (H1,H2), d2 (H2,dout)) U[0,1) fp32
+      scales: dict of fp32 power-of-two multipliers —
+              f0/f1 (activation requant), fe (error quant),
+              floss (loss rescale incl. the 1/S mean),
+              ftw/ftb (3-tuples: weight/bias learning-rate requant)
+
+    Returns ((w0', w1', w2'), (b0', b1', b2'), loss)."""
+    w0, w1, w2 = ws
+    b0, b1, b2 = bs
+    fb1, fb2 = fb
+    d0_, d1_, d2_ = dither
+
+    z0 = (xq * w0 if w0.shape[0] == 1 else xq @ w0) + b0
+    a1 = jnp.clip(jnp.round(jnp.maximum(z0, 0.0) * scales["f0"]),
+                  0.0, INT8_MAX)
+    z1 = a1 @ w1 + b1
+    a2 = jnp.clip(jnp.round(jnp.maximum(z1, 0.0) * scales["f1"]),
+                  0.0, INT8_MAX)
+    z2 = a2 @ w2 + b2
+    err = z2 - yal
+    eq = jnp.clip(jnp.round(err * scales["fe"]), -INT8_MAX, INT8_MAX)
+    loss = jnp.sum(jnp.square(err)) * scales["floss"]
+    ftw, ftb = scales["ftw"], scales["ftb"]
+
+    def proj(fbm):
+        # error fed straight back to the hidden layer; dout==1 is a
+        # broadcast, larger heads contract the output axis
+        return eq * fbm if fbm.shape[0] == 1 else eq @ fbm
+
+    def hidden_update(i, z, a_in, fbm, dith, c):
+        d = jnp.round(jnp.where(z > 0, proj(fbm), 0.0) * 2.0 ** -DFA_SHIFT)
+        g = ((a_in * d).sum(0, keepdims=True) if a_in.shape[1] == 1
+             else jax.lax.dot_general(a_in, d, _DN))
+        w = jnp.clip(c[i] - stochastic_round(g * ftw[i], dith),
+                     -INT8_MAX, INT8_MAX)
+        b = jnp.clip(c[3 + i] - jnp.round(d.sum(0) * ftb[i]),
+                     -BIAS_MAX, BIAS_MAX)
+        return tuple(w if j == i else b if j == 3 + i else c[j]
+                     for j in range(6))
+
+    def u0(c):
+        return hidden_update(0, z0, xq, fb1, d0_, c)
+
+    def u1(c):
+        return hidden_update(1, z1, a1, fb2, d1_, c)
+
+    def u2(c):
+        g = jax.lax.dot_general(a2, eq, _DN)
+        w = jnp.clip(c[2] - stochastic_round(g * ftw[2], d2_),
+                     -INT8_MAX, INT8_MAX)
+        b = jnp.clip(c[5] - jnp.round(eq.sum(0) * ftb[2]),
+                     -BIAS_MAX, BIAS_MAX)
+        return (c[0], c[1], w, c[3], c[4], b)
+
+    c = jax.lax.switch(layer, (u0, u1, u2), (w0, w1, w2, b0, b1, b2))
+    return (c[0], c[1], c[2]), (c[3], c[4], c[5]), loss
+
+
 def ssd_scan(xd, dA, Bm, Cm):
     """Chunked SSD oracle (matches kernels/ssd_scan.py layout).
 

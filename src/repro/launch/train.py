@@ -1,6 +1,13 @@
 """Training launcher: federated meta-training (TinyReptile rounds) of any
 --arch over heterogeneous synthetic LM clients, with checkpointing.
 
+``--strategy reptile|fedavg|fedsgd|transfer|tifed`` switches to the
+round engine (repro.core.run_federated) on the paper's sine workload
+instead — ``tifed`` runs TIFeD integer-only int8 local training with
+native int8 uplink billing; ``--devices N`` there shards the client
+axis over a mesh. Incompatible flag combos (e.g. ``--strategy transfer
+--buffer-size``) are rejected at parse time.
+
 The fleet is persistent (one ``LMClientStream`` per client id).
 ``--participation`` thins check-ins i.i.d.; ``--availability
 diurnal|markov`` replaces that with a structured check-in process over
@@ -71,9 +78,21 @@ def positive_int_arg(s: str) -> int:
     return v
 
 
+ENGINE_STRATEGIES = ("reptile", "fedavg", "fedsgd", "transfer", "tifed")
+
+
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ALL_ARCHS))
+    ap.add_argument("--strategy", default="tinyreptile",
+                    choices=("tinyreptile",) + ENGINE_STRATEGIES,
+                    help="'tinyreptile' (default) runs this LM launcher; "
+                         "any other choice runs the round engine "
+                         "(repro.core.run_federated) on the paper's sine "
+                         "workload — 'tifed' is integer-only int8 local "
+                         "training with native int8 uplinks")
+    ap.add_argument("--arch", choices=list(ALL_ARCHS),
+                    help="LM architecture (tinyreptile launcher only; "
+                         "engine strategies train the paper sine MLP)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--batch", type=int, default=8)
@@ -128,13 +147,124 @@ def parse_args(argv=None):
         ap.error("--mesh pod runs the fused pod-client round; FedBuff "
                  "buffering (--buffer-size) needs the split inner/flush "
                  "step — pass one or the other")
-    if args.devices is not None and args.mesh == "none":
-        ap.error("--devices only applies with --mesh data|pod")
+    # incompatible flag combos are rejected HERE, not deep inside the
+    # engine (the --participation precedent from PR 4)
+    if args.strategy == "tinyreptile":
+        if args.arch is None:
+            ap.error("--arch is required for the tinyreptile LM launcher "
+                     "(engine strategies --strategy "
+                     f"{'|'.join(ENGINE_STRATEGIES)} pick the paper sine "
+                     "workload instead)")
+        if args.devices is not None and args.mesh == "none":
+            ap.error("--devices only applies with --mesh data|pod (or "
+                     "with an engine --strategy, where it sizes the "
+                     "client mesh)")
+        return args
+    if args.arch is not None:
+        ap.error(f"--strategy {args.strategy} runs the round engine on "
+                 f"the paper sine workload; --arch selects the LM "
+                 f"launcher — pass one or the other")
+    if args.mesh != "none":
+        ap.error(f"--strategy {args.strategy} shards the client axis "
+                 f"via --devices N alone; --mesh data|pod belongs to "
+                 f"the LM launcher")
+    if args.ckpt_dir or args.resume:
+        ap.error("checkpointing (--ckpt-dir/--resume) belongs to the LM "
+                 "launcher; engine strategies run to completion in one "
+                 "process")
+    if args.strategy == "transfer" and args.buffer_size:
+        ap.error("--strategy transfer uplinks raw client batches "
+                 "(uplink_ref='none'); the FedBuff buffer stages "
+                 "phi-shaped updates and cannot hold them — drop "
+                 "--buffer-size")
+    if args.buffer_size and args.pool_size is None:
+        ap.error("--buffer-size (FedBuff) needs persistent clients to "
+                 "be stale against on the engine path: pass "
+                 "--pool-size N too")
+    if args.availability != "iid" and args.pool_size is None:
+        ap.error("--availability needs a persistent fleet on the engine "
+                 "path: pass --pool-size N")
+    if args.pool_size is not None and args.pool_size < args.clients:
+        ap.error(f"--pool-size {args.pool_size} cannot seat a cohort of "
+                 f"--clients {args.clients} (identities are unique "
+                 f"within a round)")
+    if args.devices is not None and args.devices > len(jax.devices()):
+        ap.error(f"--devices {args.devices}: only {len(jax.devices())} "
+                 f"devices visible (force host devices via XLA_FLAGS)")
     return args
+
+
+def run_engine_strategy(args):
+    """--strategy reptile|fedavg|fedsgd|transfer|tifed: one round-engine
+    run (repro.core.run_federated) on the paper's sine workload, with
+    the launcher's fleet flags mapped onto the engine's plugins
+    (--pool-size -> ClientPool, --participation/--availability ->
+    SamplingPolicy, --buffer-size -> BufferedAggregation, --devices ->
+    client mesh). tifed runs integer-only local training and bills its
+    native int8 uplinks; everything else is the fp32 engine path.
+    Prints one summary JSON row."""
+    import functools
+
+    from repro.configs.paper_models import SINE_MLP
+    from repro.core import (BufferedAggregation, ClientPool, run_federated)
+    from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,
+                                       ReptileStrategy, TifedStrategy,
+                                       TransferStrategy)
+    from repro.data import SineTasks
+    from repro.models.paper_nets import (init_paper_model, paper_model_loss,
+                                         relu_mlp_loss)
+
+    loss = functools.partial(paper_model_loss, SINE_MLP)
+    strategy = {
+        "reptile": lambda: ReptileStrategy(loss, epochs=8),
+        "fedavg": lambda: FedAvgStrategy(loss, epochs=8),
+        "fedsgd": lambda: FedSGDStrategy(loss),
+        "transfer": lambda: TransferStrategy(loss),
+        "tifed": lambda: TifedStrategy(relu_mlp_loss, epochs=8),
+    }[args.strategy]()
+    channel = (CommChannel("int8", quantize=False)
+               if args.strategy == "tifed" else CommChannel())
+    dist = SineTasks()
+    params = init_paper_model(SINE_MLP, jax.random.PRNGKey(args.seed))
+    pool = (ClientPool(dist, args.pool_size, seed=args.seed)
+            if args.pool_size else None)
+    if args.availability == "diurnal":
+        sampling = DiurnalAvailability(period=24)
+    elif args.availability == "markov":
+        sampling = MarkovAvailability()
+    elif args.participation < 1.0:
+        sampling = PartialParticipation(args.participation)
+    else:
+        sampling = None
+    buffered = (BufferedAggregation(args.buffer_size)
+                if args.buffer_size else None)
+    # eval finetune rate: the tanh paper net takes 0.02; tifed's ReLU
+    # net diverges there at k_steps 16 — 0.005 is safe for both
+    eval_lr = 0.005 if args.strategy == "tifed" else 0.02
+    t0 = time.time()
+    out = run_federated(
+        params, dist, strategy, rounds=args.rounds,
+        clients_per_round=args.clients, alpha=args.alpha, beta=args.beta,
+        support=32, seed=args.seed, eval_every=args.rounds,
+        eval_kwargs=dict(num_tasks=5, support=10, k_steps=16, lr=eval_lr,
+                         query=20),
+        channel=channel, sampling=sampling, pool=pool, buffered=buffered,
+        mesh=args.devices)
+    jax.block_until_ready(jax.tree.leaves(out["params"])[0])
+    row = {"strategy": args.strategy, "rounds": args.rounds,
+           "clients": args.clients, "dt_s": round(time.time() - t0, 3)}
+    if out["history"]:
+        row["query_loss"] = round(float(out["history"][-1]["query_loss"]),
+                                  4)
+    if "comm_bytes" in out:
+        row["comm_mb"] = round(out["comm_bytes"] / 2 ** 20, 3)
+    print(json.dumps(row), flush=True)
 
 
 def main():
     args = parse_args()
+    if args.strategy != "tinyreptile":
+        return run_engine_strategy(args)
 
     cfg = get_arch(args.arch)
     if args.reduced:

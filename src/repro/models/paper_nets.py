@@ -72,6 +72,26 @@ def paper_model_loss(cfg: PaperModelConfig, params, batch):
     return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
 
 
+def relu_mlp_apply(params, x):
+    """ReLU forward on the {w*, b*} MLP pytree — the network TIFeD's
+    integer arithmetic actually computes (ReLU's zero/identity branches
+    are exact on the int8 grid; the paper net's tanh is not), used by
+    the fp32 eval finetune of tifed runs. x: (B, ...) -> (B, dout)."""
+    h = x.reshape(x.shape[0], -1)
+    n = sum(1 for k in params if k.startswith("w"))
+    for i in range(n):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def relu_mlp_loss(params, batch):
+    """MSE on the ReLU MLP (engine loss_fn signature)."""
+    pred = relu_mlp_apply(params, batch["x"])
+    return jnp.mean(jnp.square(pred - batch["y"].reshape(pred.shape)))
+
+
 def paper_model_accuracy(cfg: PaperModelConfig, params, batch):
     pred = paper_model_apply(cfg, params, batch["x"])
     return jnp.mean((jnp.argmax(pred, -1) == batch["y"].reshape(-1)))

@@ -14,12 +14,16 @@ import numpy as np
 import pytest
 
 from repro.configs.paper_models import SINE_MLP
-from repro.core import (fedavg_train, fedsgd_train, reptile_train,
-                        tinyreptile_train, transfer_train)
+from repro.core import (CommChannel, fedavg_train, fedsgd_train,
+                        reptile_train, tifed_train, tinyreptile_train,
+                        transfer_train)
+from repro.core.engine import _block_runner
 from repro.core.meta import (evaluate_init, finetune_batch, finetune_online,
                              tree_bytes, tree_lerp)
+from repro.core.strategies import TifedStrategy
 from repro.data import SineTasks
-from repro.models.paper_nets import init_paper_model, paper_model_loss
+from repro.models.paper_nets import (init_paper_model, paper_model_loss,
+                                     relu_mlp_loss)
 
 LOSS = functools.partial(paper_model_loss, SINE_MLP)
 EVAL = dict(num_tasks=4, support=8, k_steps=4, lr=0.02, query=16)
@@ -301,6 +305,88 @@ def test_engine_does_not_clobber_init_params(setup):
                       seed=0)
     for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(params)):
         np.testing.assert_array_equal(a, np.asarray(b))
+
+
+TIFED_EVAL = dict(num_tasks=4, support=8, k_steps=4, lr=0.005, query=16)
+
+
+def test_tifed_seeded_determinism(setup):
+    """Same seed -> bitwise-identical params and history (the dither
+    planes are baked trace constants, so nothing is run-dependent)."""
+    params, dist = setup
+    kw = dict(rounds=20, alpha=1.0, support=16, clients_per_round=4,
+              seed=31, eval_every=10, eval_kwargs=TIFED_EVAL)
+    a = tifed_train(params, dist, **kw)
+    b = tifed_train(params, dist, **kw)
+    for x, y in zip(jax.tree.leaves(a["params"]),
+                    jax.tree.leaves(b["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a["comm_bytes"] == b["comm_bytes"]
+    assert len(a["history"]) == 2
+    for ea, eb in zip(a["history"], b["history"]):
+        assert set(ea) == set(eb)
+        for k in ea:
+            np.testing.assert_array_equal(ea[k], eb[k], err_msg=k)
+
+
+def test_tifed_pipelined_matches_sync_bitwise(setup):
+    """Prefetch + block splitting must not change the integer
+    trajectory at all (sampler held fixed: the two sampler flavours have
+    documentedly different block RNG orders)."""
+    params, dist = setup
+    kw = dict(rounds=16, alpha=1.0, support=16, clients_per_round=4,
+              seed=32, sampler="reference")
+    sync = tifed_train(params, dist, prefetch=0, **kw)
+    piped = tifed_train(params, dist, prefetch=2, max_block=4, **kw)
+    for x, y in zip(jax.tree.leaves(sync["params"]),
+                    jax.tree.leaves(piped["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert sync["comm_bytes"] == piped["comm_bytes"]
+
+
+def test_tifed_single_trace_and_int8_billing(setup):
+    """One jit trace per config, and the uplink bills at the int8 rate:
+    1 byte/param both directions, 4x under the fp32 bill for the same
+    traffic (the 6 exponent scalars ride free)."""
+    params, dist = setup
+    # lr_shift=5 gives this test its own cached runner (the runner cache
+    # keys on the strategy dataclass), so trace_count pins THIS config
+    rounds, clients = 12, 4
+    out = tifed_train(params, dist, rounds=rounds, alpha=1.0, support=16,
+                      clients_per_round=clients, lr_shift=5, seed=33)
+    runner = _block_runner(TifedStrategy(relu_mlp_loss, epochs=8,
+                                         lr_shift=5), 0.0,
+                           CommChannel("int8", quantize=False),
+                           scheduled=False)
+    assert runner.trace_count == 1
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    assert out["comm_bytes"] == 2 * clients * rounds * n_params
+    fp32_bill = 2 * clients * rounds * tree_bytes(params)
+    assert out["comm_bytes"] * 4 == fp32_bill
+
+
+def test_tifed_rejects_incompatible_channels(setup):
+    """tifed uplinks NATIVE int8 trees: an fp32 wire or a simulating
+    channel would double-quantize or mis-bill, so the engine refuses."""
+    params, dist = setup
+    for bad in (CommChannel(),                       # fp32 wire
+                CommChannel("int8"),                 # simulates int8
+                CommChannel("float16", quantize=False)):  # wrong width
+        with pytest.raises(ValueError, match="payload_dtype"):
+            tifed_train(params, dist, rounds=2, support=4, channel=bad)
+
+
+def test_tifed_learns_sine(setup):
+    """End-to-end sanity: integer training actually reduces query loss
+    vs the untrained init under the paper's eval protocol."""
+    params, dist = setup
+    out = tifed_train(params, dist, rounds=40, alpha=1.0, support=32,
+                      clients_per_round=4, seed=34, eval_every=40,
+                      eval_kwargs=TIFED_EVAL)
+    ev0 = evaluate_init(relu_mlp_loss, params, dist,
+                        np.random.default_rng(10_039), **TIFED_EVAL)
+    assert np.isfinite(out["history"][-1]["query_loss"])
+    assert out["history"][-1]["query_loss"] < ev0["query_loss"]
 
 
 def test_pallas_server_update_in_scan(setup):

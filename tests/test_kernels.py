@@ -85,6 +85,93 @@ def test_ssd_scan(B, H, nc, Q, P, N):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+def _tifed_case(dims, S, seed, extreme=False):
+    """Random (or all-extreme) int-valued fp32 inputs for the TIFeD
+    epoch kernel, plus a power-of-two scales dict. ``extreme`` drives
+    every tensor to its dtype rails (the int32-accumulation edge: the
+    documented < 2^24 envelope for exact fp32 parity)."""
+    rng = np.random.default_rng(seed)
+    din, h1, h2, dout = dims
+
+    def ints(lo, hi, shape):
+        if extreme:
+            return jnp.asarray(rng.choice([float(lo), float(hi)], shape),
+                               jnp.float32)
+        return jnp.asarray(rng.integers(lo, hi + 1, shape), jnp.float32)
+
+    ws = tuple(ints(-127, 127, s)
+               for s in ((din, h1), (h1, h2), (h2, dout)))
+    bs = tuple(ints(-2 ** 22, 2 ** 22, (b,)) if extreme
+               else ints(-2 ** 15, 2 ** 15, (b,)) for b in (h1, h2, dout))
+    xq = ints(-127, 127, (S, din))
+    yal = ints(-2 ** 21, 2 ** 21, (S, dout)) if extreme \
+        else ints(-2 ** 15, 2 ** 15, (S, dout))
+    fb = tuple(ints(-127, 127, (dout, h)) for h in (h1, h2))
+    dither = tuple(jnp.asarray(rng.random(s), jnp.float32)
+                   for s in ((din, h1), (h1, h2), (h2, dout)))
+    f32 = jnp.float32
+    scales = {"f0": f32(2.0 ** -7), "f1": f32(2.0 ** -7),
+              "fe": f32(2.0 ** -9), "floss": f32(2.0 ** -4 / S),
+              "ftw": (f32(2.0 ** -8), f32(2.0 ** -9), f32(2.0 ** -10)),
+              "ftb": (f32(2.0 ** -6), f32(2.0 ** -7), f32(2.0 ** -8))}
+    return ws, bs, xq, yal, fb, dither, scales
+
+
+@pytest.mark.parametrize("dims", [(1, 16, 16, 1),   # sine-MLP shape class
+                                  (5, 16, 12, 3)])  # din>1, dout>1 paths
+@pytest.mark.parametrize("layer", [0, 1, 2])
+def test_dfa_epoch_int8_matches_ref(dims, layer):
+    """Kernel vs fp32-exact oracle: EXACT equality, not allclose — both
+    sides compute the same integers (ref in fp32 carrying exact ints,
+    kernel in native int8/int32)."""
+    ws, bs, xq, yal, fb, dither, scales = _tifed_case(dims, 32, layer + 10)
+    gw, gb, gl = ops.dfa_epoch_int8(ws, bs, xq, yal, layer, fb, dither,
+                                    scales)
+    ww, wb, wl = ref.dfa_int8_epoch(ws, bs, xq, yal, layer, fb, dither,
+                                    scales)
+    for i in range(3):
+        assert gw[i].dtype == jnp.int8 and gb[i].dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(gw[i], np.float32), ww[i])
+        np.testing.assert_array_equal(np.asarray(gb[i], np.float32), wb[i])
+    np.testing.assert_array_equal(np.float32(gl), np.float32(wl))
+    # the untrained layers pass through unchanged
+    for i in range(3):
+        if i != layer:
+            np.testing.assert_array_equal(np.asarray(gw[i], np.float32),
+                                          np.asarray(ws[i]))
+
+
+@pytest.mark.parametrize("layer", [0, 1, 2])
+def test_dfa_epoch_int8_accumulation_edge(layer):
+    """All-rails inputs at the documented envelope: S=512 samples of
+    +/-127 against +/-127 weights and +/-2^22 biases keep every int32
+    accumulator below 2^24, so kernel and oracle must still agree
+    exactly and land inside the int8 / bias clip rails."""
+    ws, bs, xq, yal, fb, dither, scales = _tifed_case(
+        (1, 8, 8, 1), 512, 99, extreme=True)
+    gw, gb, _ = ops.dfa_epoch_int8(ws, bs, xq, yal, layer, fb, dither,
+                                   scales)
+    ww, wb, _ = ref.dfa_int8_epoch(ws, bs, xq, yal, layer, fb, dither,
+                                   scales)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(gw[i], np.float32), ww[i])
+        np.testing.assert_array_equal(np.asarray(gb[i], np.float32), wb[i])
+        assert np.abs(np.asarray(gw[i], np.float32)).max() <= ref.INT8_MAX
+        assert np.abs(np.asarray(gb[i], np.float64)).max() <= ref.BIAS_MAX
+
+
+def test_stochastic_round_statistics():
+    """floor(v + u), u ~ U[0,1): values land on the neighbouring
+    integers only, and the mean over many dithers is unbiased."""
+    rng = np.random.default_rng(7)
+    v = jnp.asarray(rng.uniform(-5.0, 5.0, (64,)), jnp.float32)
+    dithers = jnp.asarray(rng.random((4096, 64)), jnp.float32)
+    r = np.asarray(ref.stochastic_round(v[None, :], dithers))
+    lo, hi = np.floor(np.asarray(v)), np.ceil(np.asarray(v))
+    assert np.all((r == lo[None, :]) | (r == hi[None, :]))
+    np.testing.assert_allclose(r.mean(0), np.asarray(v), atol=0.05)
+
+
 def test_ssd_kernel_matches_model_path():
     """Kernel agrees with the model's ssd_chunked (different layout)."""
     from repro.models.mamba2 import ssd_chunked

@@ -149,6 +149,45 @@ print("launcher mesh flags ok")
     assert "launcher mesh flags ok" in out
 
 
+def test_train_launcher_engine_strategies():
+    """--strategy routes to the engine: a tifed run prints one summary
+    row (int8 comm bill, finite eval), and incompatible flag combos are
+    parse-time errors, not mid-run crashes."""
+    out = _run("""
+import json, subprocess, sys, os
+base = [sys.executable, "-m", "repro.launch.train", "--strategy", "tifed",
+        "--rounds", "4", "--clients", "4"]
+env = dict(os.environ)
+r = subprocess.run(base, capture_output=True, text=True, env=env,
+                   timeout=400)
+assert r.returncode == 0, r.stderr[-2000:]
+rows = [json.loads(l) for l in r.stdout.splitlines() if l.startswith("{")]
+assert len(rows) == 1, r.stdout
+row = rows[0]
+assert row["strategy"] == "tifed" and row["rounds"] == 4
+assert row["query_loss"] == row["query_loss"]      # finite, not NaN
+n_params = 1153
+assert abs(row["comm_mb"] - 2 * 4 * 4 * n_params / 2 ** 20) < 1e-3
+bads = (
+    ["--strategy", "tifed", "--arch", "tinyllama-1.1b"],
+    ["--strategy", "tifed", "--mesh", "data"],
+    ["--strategy", "tifed", "--ckpt-dir", "/tmp/x"],
+    ["--strategy", "transfer", "--buffer-size", "2"],
+    ["--strategy", "reptile", "--buffer-size", "2"],   # no --pool-size
+    ["--strategy", "reptile", "--availability", "diurnal"],
+    ["--strategy", "reptile", "--pool-size", "2", "--clients", "4"],
+)
+for bad in bads:
+    r = subprocess.run([sys.executable, "-m", "repro.launch.train",
+                        "--rounds", "2"] + bad, capture_output=True,
+                       text=True, env=env, timeout=120)
+    assert r.returncode != 0, bad
+    assert not r.stdout.strip(), bad            # rejected before running
+print("engine strategy launcher ok")
+""", devices=2)
+    assert "engine strategy launcher ok" in out
+
+
 def test_pod_client_meta_step():
     """Beyond-paper scale-out: pods as federated clients (shard_map manual
     over 'pod', auto over data/model). alpha=0 must be the identity."""

@@ -36,10 +36,12 @@ from repro.core import (BufferedAggregation, ClientPool, CommChannel,
                         run_federated, runner_cache_stats)
 from repro.core.engine import _block_runner
 from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,
-                                   ReptileStrategy, TinyReptileStrategy,
-                                   TransferStrategy)
+                                   ReptileStrategy, TifedStrategy,
+                                   TinyReptileStrategy, TransferStrategy)
+from repro.core.tifed import tifed_train
 from repro.data import SineTasks
-from repro.models.paper_nets import init_paper_model, paper_model_loss
+from repro.models.paper_nets import (init_paper_model, paper_model_loss,
+                                     relu_mlp_loss)
 
 LOSS = functools.partial(paper_model_loss, SINE_MLP)
 EVAL = dict(num_tasks=2, support=4, k_steps=2, lr=0.02, query=8)
@@ -103,6 +105,37 @@ for i, (strategy, kw) in enumerate(cases):
 print("five-strategy parity ok")
 """)
     assert "five-strategy parity ok" in out
+
+
+def test_mesh_parity_tifed_int8():
+    """tifed (PR 6) on the client mesh: the int8 result trees shard and
+    psum-aggregate like the fp32 strategies — 1-vs-8-device seeded
+    parity on params, eval history, and the exact int8 transport bill,
+    at one jit trace for the sharded config."""
+    out = _run("""
+S = TifedStrategy(relu_mlp_loss, epochs=8)
+ch = CommChannel("int8", quantize=False)
+mesh = client_mesh(8)
+clear_runner_cache()
+TEVAL = dict(num_tasks=2, support=4, k_steps=2, lr=0.01, query=8)
+kw = dict(rounds=7, beta=0.0, support=16, seed=3, clients_per_round=8,
+          eval_every=3, eval_kwargs=TEVAL, channel=ch)
+flat = run_federated(params, dist, S, **kw)
+shrd = run_federated(params, dist, S, mesh=mesh, **kw)
+assert_close(flat["params"], shrd["params"])
+assert len(flat["history"]) == len(shrd["history"]) == 2
+for fe, se in zip(flat["history"], shrd["history"]):
+    np.testing.assert_allclose(fe["query_loss"], se["query_loss"],
+                               rtol=1e-3, atol=1e-4)
+assert flat["comm_bytes"] == shrd["comm_bytes"]
+n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+assert shrd["comm_bytes"] == 2 * 8 * 7 * n      # 1 byte/param, both ways
+runner = _block_runner(S, 0.0, ch, scheduled=True, mesh=mesh,
+                       masked=False)
+assert runner.trace_count == 1, runner.trace_count
+print("tifed mesh parity ok")
+""")
+    assert "tifed mesh parity ok" in out
 
 
 def test_mesh_pooled_buffered_and_availability():
