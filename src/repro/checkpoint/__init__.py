@@ -1,1 +1,5 @@
-from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.ckpt import (AsyncCheckpointWriter,  # noqa: F401
+                                   RoundState, latest_checkpoint,
+                                   list_checkpoints, restore_checkpoint,
+                                   restore_round_state, save_checkpoint,
+                                   save_round_state, verify_checkpoint)

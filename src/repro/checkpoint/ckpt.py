@@ -1,20 +1,57 @@
 """Pytree checkpointing to .npz (offline container: no orbax).
 
-Leaves are stored under their tree paths; restore validates structure
-against a template pytree. Supports step-tagged files + a LATEST pointer,
-atomic writes (tmp + rename) — enough substrate for real training loops.
+Leaves are stored under their tree paths; restore validates structure,
+shapes, AND dtypes against a template pytree (pass ``cast=True`` to
+opt back into casting — an fp32 file silently cast into an int8
+template would corrupt a quantized grid). Files are step-tagged
+(``ckpt_<step>.npz``) next to a per-file checksum manifest
+(``ckpt_<step>.json``) and a LATEST pointer; every write — payload,
+manifest, pointer — is atomic (tmp + ``os.replace``). Restoring from a
+directory walks snapshots newest-first and SKIPS torn or corrupted
+files (checksum mismatch, truncated zip) with a warning, so a crash
+mid-write degrades to the newest valid snapshot instead of killing the
+resume.
+
+On top of that substrate sits the round-state layer used by
+``repro.core.engine.run_federated`` for preemption-safe runs:
+
+- :class:`RoundState` — the complete federated scan carry at a block
+  boundary (phi, PoolState with its FedBuff slabs, transport bills,
+  eval history, and the host-side RNG/policy state that makes resume
+  bit-for-bit);
+- :func:`save_round_state` / :func:`restore_round_state` — its
+  (de)serialization through the generic checkpoint format;
+- :class:`AsyncCheckpointWriter` — a background thread that performs
+  the device->host transfer and the file writes off the training
+  thread, behind a bounded queue, with retention of the last K
+  snapshots.
 """
 from __future__ import annotations
 
+import dataclasses
+import io
 import json
+import logging
 import os
-import tempfile
-from typing import Any, Optional
+import queue
+import re
+import threading
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.runtime.sharding import _path_str
+
+logger = logging.getLogger(__name__)
+
+_CKPT_RE = re.compile(r"^ckpt_(\d{8})\.npz$")
+
+#: test-only fault-injection hook (see repro.testing.faults): called as
+#: hook(step) after a snapshot is fully durable (payload + manifest +
+#: LATEST on disk). None in production.
+_post_save_hook: Optional[Callable[[int], None]] = None
 
 
 def _flatten(tree):
@@ -23,37 +60,161 @@ def _flatten(tree):
             for i, (path, leaf) in enumerate(leaves)}
 
 
+def _jsonable(obj):
+    """Recursively coerce NumPy scalars/arrays so ``extra`` dicts (eval
+    history rows, RNG bit-generator states) survive json.dumps."""
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    return obj
+
+
+def _crc32(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            crc = zlib.crc32(block, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _atomic_write_bytes(path: str, data: bytes) -> None:
+    # fixed per-process tmp name instead of mkstemp: the writer is
+    # single-threaded per process and atomicity comes from os.replace,
+    # so the mkstemp open/close round-trip is pure hot-path overhead
+    tmp = f"{path}.tmp{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    _atomic_write_bytes(path, text.encode())
+
+
+def manifest_path(payload_path: str) -> str:
+    """The checksum manifest sitting next to ``ckpt_<step>.npz``."""
+    root, _ = os.path.splitext(payload_path)
+    return root + ".json"
+
+
+def list_checkpoints(directory: str) -> List[str]:
+    """All ``ckpt_*.npz`` payload paths in ``directory``, oldest first."""
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return []
+    found = [(int(m.group(1)), os.path.join(directory, name))
+             for name in names for m in [_CKPT_RE.match(name)] if m]
+    return [p for _, p in sorted(found)]
+
+
+def _apply_retention(directory: str, keep: int) -> None:
+    if keep < 1:
+        return
+    for path in list_checkpoints(directory)[:-keep]:
+        for victim in (path, manifest_path(path)):
+            try:
+                os.remove(victim)
+            except OSError:
+                pass
+
+
 def save_checkpoint(directory: str, tree: Any, step: int,
-                    extra: Optional[dict] = None) -> str:
+                    extra: Optional[dict] = None,
+                    keep: Optional[int] = None) -> str:
+    """Write ``ckpt_<step>.npz`` + its checksum manifest, update LATEST,
+    and (with ``keep``) prune all but the newest ``keep`` snapshots.
+    Every file lands via tmp + ``os.replace``, so readers never observe
+    a half-written payload under its final name."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, __step__=step,
-                 __extra__=json.dumps(extra or {}), **flat)
-    os.replace(tmp, path)
-    with open(os.path.join(directory, "LATEST"), "w") as f:
-        f.write(os.path.basename(path))
+    # serialize in memory: one write syscall per file and the checksum
+    # comes from the buffer, not a re-read of what was just written —
+    # keeps the per-snapshot GIL-held time off the engine's hot path
+    buf = io.BytesIO()
+    np.savez(buf, __step__=step,
+             __extra__=json.dumps(_jsonable(extra or {})), **flat)
+    payload = buf.getvalue()
+    _atomic_write_bytes(path, payload)
+    _atomic_write_text(manifest_path(path), json.dumps({
+        "file": os.path.basename(path), "step": int(step),
+        "size": len(payload),
+        "crc32": zlib.crc32(payload) & 0xFFFFFFFF}))
+    _atomic_write_text(os.path.join(directory, "LATEST"),
+                       os.path.basename(path))
+    if keep is not None:
+        _apply_retention(directory, keep)
+    hook = _post_save_hook
+    if hook is not None:
+        hook(int(step))
     return path
 
 
+def verify_checkpoint(path: str) -> bool:
+    """True iff ``path`` exists and matches its manifest (size + crc32).
+    A payload without a manifest (legacy or foreign file) passes — a
+    torn zip there is still caught at load time."""
+    if not os.path.exists(path):
+        return False
+    man = manifest_path(path)
+    if not os.path.exists(man):
+        return True
+    try:
+        with open(man) as f:
+            meta = json.load(f)
+    except (OSError, ValueError):
+        return False
+    if meta.get("size") != os.path.getsize(path):
+        return False
+    return meta.get("crc32") == _crc32(path)
+
+
 def latest_checkpoint(directory: str) -> Optional[str]:
+    """Newest checkpoint payload path in ``directory``, or None.
+
+    Trusts the LATEST pointer only when it names an existing
+    ``ckpt_*.npz``; a stale or missing pointer falls back to scanning
+    the directory (with a warning), so a crash between the payload
+    write and the pointer update never strands the run."""
     marker = os.path.join(directory, "LATEST")
-    if not os.path.exists(marker):
-        return None
-    with open(marker) as f:
-        return os.path.join(directory, f.read().strip())
+    if os.path.exists(marker):
+        with open(marker) as f:
+            name = f.read().strip()
+        cand = os.path.join(directory, name)
+        if name and _CKPT_RE.match(name) and os.path.exists(cand):
+            return cand
+        logger.warning(
+            "checkpoint LATEST pointer in %s is stale (%r); falling back "
+            "to a directory scan", directory, name)
+    paths = list_checkpoints(directory)
+    return paths[-1] if paths else None
 
 
-def restore_checkpoint(directory_or_file: str, template: Any):
-    """Returns (tree, step, extra). Template provides structure/dtypes."""
-    path = directory_or_file
-    if os.path.isdir(path):
-        path = latest_checkpoint(path)
-        if path is None:
-            raise FileNotFoundError(f"no checkpoint in {directory_or_file}")
-    data = np.load(path, allow_pickle=False)
+def _read_npz(path: str) -> Dict[str, np.ndarray]:
+    """Load and fully materialize every member — member reads hit the
+    zip CRCs, so truncation/corruption raises here, not mid-restore."""
+    with np.load(path, allow_pickle=False) as data:
+        return {k: data[k] for k in data.files}
+
+
+def _restore_from_data(data, template, cast: bool):
     leaves_with_path = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)
     out = []
@@ -64,7 +225,216 @@ def restore_checkpoint(directory_or_file: str, template: Any):
         arr = data[key]
         if arr.shape != np.shape(leaf):
             raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
-        out.append(arr.astype(np.asarray(leaf).dtype))
+        want = np.asarray(leaf).dtype
+        if arr.dtype != want:
+            if not cast:
+                raise TypeError(
+                    f"{key}: checkpoint dtype {arr.dtype} != template "
+                    f"{want}; refusing to cast silently (a float file "
+                    f"restored into a quantized template would corrupt "
+                    f"it) — pass cast=True to opt in")
+            arr = arr.astype(want)
+        out.append(arr)
     step = int(data["__step__"])
     extra = json.loads(str(data["__extra__"]))
     return jax.tree_util.tree_unflatten(treedef, out), step, extra
+
+
+def restore_checkpoint(directory_or_file: str, template: Any,
+                       cast: bool = False):
+    """Returns (tree, step, extra). Template provides structure, shapes,
+    and dtypes; a dtype mismatch RAISES unless ``cast=True``.
+
+    Given a directory, snapshots are tried newest-first and torn or
+    corrupted files (checksum-manifest mismatch, unreadable zip) are
+    skipped with a warning — graceful fallback to the newest valid
+    snapshot. Structural mismatches against the template (missing leaf,
+    wrong shape/dtype) are NOT swallowed: they indicate a config
+    mismatch, not a bad file."""
+    path = directory_or_file
+    if not os.path.isdir(path):
+        if not verify_checkpoint(path):
+            raise ValueError(f"checkpoint {path} fails its checksum "
+                             f"manifest (torn or corrupted write)")
+        return _restore_from_data(_read_npz(path), template, cast)
+
+    candidates = list(reversed(list_checkpoints(path)))
+    pointed = latest_checkpoint(path)
+    if pointed in candidates:
+        candidates.remove(pointed)
+        candidates.insert(0, pointed)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint in {directory_or_file}")
+    for cand in candidates:
+        if not verify_checkpoint(cand):
+            logger.warning(
+                "checkpoint %s fails its checksum manifest (torn or "
+                "corrupted write); falling back to the next snapshot",
+                cand)
+            continue
+        try:
+            data = _read_npz(cand)
+        except Exception as exc:
+            logger.warning(
+                "checkpoint %s is unreadable (%s); falling back to the "
+                "next snapshot", cand, exc)
+            continue
+        return _restore_from_data(data, template, cast)
+    raise ValueError(
+        f"every checkpoint in {directory_or_file} is torn or corrupted "
+        f"({len(candidates)} candidates tried)")
+
+
+# ---------------------------------------------------------------------------
+# Round-state layer: the federated engine's full scan carry.
+
+@dataclasses.dataclass
+class RoundState:
+    """The complete ``run_federated`` carry at a block boundary.
+
+    round:            completed rounds — the block cursor; resume
+                      replans blocks from here
+                      (``plan_blocks(..., start=round)``).
+    phi:              server params pytree (device or host arrays).
+    pool_state:       ``repro.core.pool.PoolState`` (incl. int8 FedBuff
+                      buffer slabs and flush counters) or None.
+    per_client_bytes: (N,) int64 per-client transport bills.
+    comm_bytes:       total transport billed so far.
+    history:          eval rows appended so far (JSON-able dicts).
+    host:             host-side state that makes resume bit-for-bit:
+                      ``{"rng": <bit_generator state>,
+                      "pool": ClientPool.host_state(),
+                      "sampling": SamplingPolicy.state_dict()}`` —
+                      captured on the prefetch producer right after the
+                      block's draws, so the stream continues exactly
+                      where the uninterrupted run would.
+    fingerprint:      config identity (seed, cohort, pool size, shards,
+                      strategy name, ...) checked at resume.
+    """
+    round: int
+    phi: Any
+    pool_state: Any = None
+    per_client_bytes: Any = None
+    comm_bytes: int = 0
+    history: list = dataclasses.field(default_factory=list)
+    host: dict = dataclasses.field(default_factory=dict)
+    fingerprint: dict = dataclasses.field(default_factory=dict)
+
+
+def round_state_payload(state: RoundState) -> Tuple[dict, int, dict]:
+    """(tree, step, extra) for the generic checkpoint format — the
+    arrays ride the npz, everything host-side rides the extra JSON."""
+    tree = {"phi": state.phi}
+    if state.pool_state is not None:
+        tree["pool"] = state.pool_state
+    if state.per_client_bytes is not None:
+        tree["bills"] = np.asarray(state.per_client_bytes)
+    extra = {"comm_bytes": int(state.comm_bytes),
+             "history": state.history, "host": state.host,
+             "fingerprint": state.fingerprint}
+    return tree, int(state.round), extra
+
+
+def save_round_state(directory: str, state: RoundState,
+                     keep: Optional[int] = None) -> str:
+    tree, step, extra = round_state_payload(state)
+    return save_checkpoint(directory, jax.device_get(tree), step,
+                           extra=extra, keep=keep)
+
+
+def restore_round_state(directory: str, *, phi, pool_state=None,
+                        per_client_bytes=None,
+                        cast: bool = False) -> RoundState:
+    """Restore the newest valid :class:`RoundState`; the keyword
+    templates fix shapes/dtypes (mesh-sharded templates are fine — only
+    their shapes are read). Raises FileNotFoundError when the directory
+    holds no snapshot at all."""
+    template = {"phi": phi}
+    if pool_state is not None:
+        template["pool"] = pool_state
+    if per_client_bytes is not None:
+        template["bills"] = np.asarray(per_client_bytes)
+    tree, step, extra = restore_checkpoint(directory, template, cast=cast)
+    return RoundState(
+        round=step, phi=tree["phi"], pool_state=tree.get("pool"),
+        per_client_bytes=tree.get("bills"),
+        comm_bytes=int(extra.get("comm_bytes", 0)),
+        history=list(extra.get("history", [])),
+        host=dict(extra.get("host", {})),
+        fingerprint=dict(extra.get("fingerprint", {})))
+
+
+class AsyncCheckpointWriter:
+    """Background-thread snapshot writer: ``submit`` enqueues a
+    (device-resident) pytree and returns immediately; the writer thread
+    performs the device->host transfer (``jax.device_get``) and the
+    atomic ``save_checkpoint`` off the training thread. The queue is
+    BOUNDED (``depth``): when the writer falls that many snapshots
+    behind, ``submit`` blocks — backpressure instead of unbounded host
+    memory. Writer-side exceptions surface on the caller thread at the
+    next ``submit``/``wait``/``close``.
+
+    The engine hands this thread block-boundary COPIES
+    (``jax.tree.map(jnp.copy, ...)``) — the live carry is donated to
+    the next block, so the writer must never hold the original buffers.
+    """
+
+    _DONE = object()
+
+    def __init__(self, directory: str, keep: Optional[int] = 3,
+                 depth: int = 2):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._run,
+                                        name="ckpt-writer", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is self._DONE:
+                self._q.task_done()
+                return
+            tree, step, extra = item
+            try:
+                host = jax.device_get(tree)
+                save_checkpoint(self.directory, host, step, extra=extra,
+                                keep=self.keep)
+            except BaseException as exc:
+                self._error = exc
+            self._q.task_done()
+
+    def _check(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def submit(self, tree, step: int, extra: Optional[dict] = None) -> None:
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointWriter is closed")
+        self._check()
+        self._q.put((tree, int(step), extra))
+
+    def submit_state(self, state: RoundState) -> None:
+        tree, step, extra = round_state_payload(state)
+        self.submit(tree, step, extra)
+
+    def wait(self) -> None:
+        """Block until every submitted snapshot is durable; re-raise
+        any writer error."""
+        self._q.join()
+        self._check()
+
+    def close(self, raise_errors: bool = True) -> None:
+        """Drain the queue, stop the thread (idempotent); with
+        ``raise_errors`` re-raise any pending writer exception."""
+        if not self._closed:
+            self._closed = True
+            if self._thread.is_alive():
+                self._q.put(self._DONE)
+            self._thread.join(timeout=120.0)
+        if raise_errors:
+            self._check()

@@ -76,6 +76,7 @@ otherwise pin up to 64 stale executables).
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import inspect
 import logging
@@ -87,6 +88,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.checkpoint.ckpt import (AsyncCheckpointWriter, RoundState,
+                                   restore_round_state, save_round_state)
 from repro.core.meta import evaluate_init
 from repro.core.pipeline import (ClientSchedule, SamplingPolicy,
                                  UniformSampling, block_shardings,
@@ -1039,6 +1042,14 @@ def clear_runner_cache() -> None:
     _UNHASHABLE_MISSES["count"] = 0
 
 
+@jax.jit
+def _snapshot_copy(tree):
+    """One fused dispatch copying the whole carry (vs one dispatch per
+    leaf with a bare tree.map) — the snapshot path runs between donating
+    block launches, so its host cost lands on the round hot path."""
+    return jax.tree.map(jnp.copy, tree)
+
+
 def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   rounds: int, clients_per_round: int = 1,
                   alpha: float = 1.0, beta: float = 0.01, support: int = 32,
@@ -1050,7 +1061,9 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   sampling: Optional[SamplingPolicy] = None,
                   pool: Optional[ClientPool] = None,
                   buffered: Optional[BufferedAggregation] = None,
-                  mesh=None) -> Dict:
+                  mesh=None, ckpt_dir: Optional[str] = None,
+                  ckpt_every: int = 10, ckpt_keep: int = 3,
+                  ckpt_async: bool = True, resume: bool = False) -> Dict:
     """Run `rounds` federated rounds of `strategy`.
 
     Returns {"params", "history"} (+ "comm_bytes" and "per_client_bytes"
@@ -1102,6 +1115,24 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     computes the same training trajectory as the 1-device run up to
     float reduction order. `mesh=None` (default) is bit-for-bit the
     single-device engine.
+
+    `ckpt_dir` makes the run PREEMPTION-SAFE: at every block boundary
+    crossing a multiple of `ckpt_every` rounds (blocks are additionally
+    cut there — bitwise-neutral) the engine snapshots the complete scan
+    carry as a repro.checkpoint.RoundState — phi, PoolState (incl.
+    FedBuff buffer slabs), per-client transport bills, eval history,
+    and the host RNG / pool-stream / policy state captured at the
+    prefetch producer — via a background AsyncCheckpointWriter
+    (device->host transfer off the critical path, bounded queue, atomic
+    checksum-manifested files, last-`ckpt_keep` retention;
+    `ckpt_async=False` writes inline). `resume=True` restores the
+    newest VALID snapshot (torn/corrupted files fall back with a
+    warning) and fast-forwards block planning: a killed-and-resumed run
+    is bit-for-bit identical — params, pool state, history rows, and
+    bills — to the uninterrupted seeded run. `rounds` may grow between
+    the original run and the resume (training continues past the old
+    horizon); seed/cohort/pool/mesh-shard mismatches are rejected via a
+    config fingerprint.
     """
     if channel is None:
         channel = CommChannel()
@@ -1152,10 +1183,9 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     # private copy: the block runner donates its phi argument, and the
     # caller's init_params must stay usable (they are reused across runs)
     phi = jax.tree.map(jnp.array, init_params)
-    if mesh is not None:
-        phi = jax.device_put(phi, NamedSharding(mesh, P()))
     history: List[Dict] = []
     comm_bytes = 0
+    start_round = 0
     per_client_bytes = np.zeros(pool.size if pooled else clients_per_round,
                                 np.int64)
     uniform = getattr(sampling, "schedule_kind", "scheduled") == "uniform"
@@ -1176,13 +1206,95 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         phi, c_pad, buffered, shards=shards,
         template=uplink_template(phi) if uplink_template else None)
         if pooled else None)
+    if ckpt_dir is not None:
+        if not (isinstance(ckpt_every, int) and ckpt_every >= 1):
+            raise ValueError(f"ckpt_every must be an int >= 1, got "
+                             f"{ckpt_every!r}")
+        if not (isinstance(ckpt_keep, int) and ckpt_keep >= 1):
+            raise ValueError(f"ckpt_keep must be an int >= 1, got "
+                             f"{ckpt_keep!r}")
+        # config identity stamped into every snapshot: a resume under a
+        # different seed/cohort/pool/mesh would replay a DIFFERENT run
+        # from this run's carry — reject it instead of training garbage
+        fingerprint = {
+            "seed": int(seed), "clients_per_round": int(clients_per_round),
+            "support": int(support), "shards": int(shards),
+            "strategy": type(strategy).__name__,
+            "pool_size": int(pool.size) if pooled else 0,
+            "buffered": buffered is not None}
+    elif resume:
+        raise ValueError("resume=True needs ckpt_dir= to restore from")
+    if resume:
+        try:
+            saved = restore_round_state(
+                ckpt_dir, phi=phi, pool_state=pool_state,
+                per_client_bytes=per_client_bytes)
+        except FileNotFoundError:
+            logger.info("resume: no snapshot in %s yet; starting fresh",
+                        ckpt_dir)
+            saved = None
+        if saved is not None:
+            diff = {k: (saved.fingerprint.get(k), v)
+                    for k, v in fingerprint.items()
+                    if saved.fingerprint and saved.fingerprint.get(k) != v}
+            if diff:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was written by a different "
+                    f"run config (saved != current): {diff}")
+            if saved.round > rounds:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} is at round {saved.round}, "
+                    f"past rounds={rounds}; raise the horizon to continue")
+            start_round = int(saved.round)
+            phi = jax.tree.map(jnp.asarray, saved.phi)
+            if pooled:
+                pool_state = jax.tree.map(jnp.asarray, saved.pool_state)
+                pool.load_host_state(saved.host.get("pool", {}))
+            per_client_bytes = np.asarray(saved.per_client_bytes,
+                                          np.int64).copy()
+            comm_bytes = int(saved.comm_bytes)
+            history = list(saved.history)
+            # the host rng resumes EXACTLY where the interrupted run's
+            # producer stopped drawing — the bit-for-bit contract
+            rng.bit_generator.state = saved.host["rng"]
+            sampling.load_state_dict(saved.host.get("sampling", {}),
+                                     rng=rng)
+            logger.info("resumed %s from round %d", ckpt_dir, start_round)
+    if mesh is not None:
+        phi = jax.device_put(phi, NamedSharding(mesh, P()))
     if mesh is not None and pooled:
         pool_state = jax.device_put(
             pool_state,
             jax.tree.map(lambda s: NamedSharding(mesh, s),
                          pool_state_specs(pool_state, CLIENT_AXIS),
                          is_leaf=lambda x: isinstance(x, P)))
-    blocks, pad = plan_blocks(rounds, eval_every, max_block)
+    blocks, pad = plan_blocks(rounds, eval_every, max_block,
+                              start=start_round,
+                              ckpt_every=ckpt_every if ckpt_dir else 0)
+
+    def ckpt_at(end):
+        """Deterministic snapshot predicate, shared by the producer's
+        host-state capture and the consumer's device-state snapshot
+        (plan_blocks cuts blocks at these rounds when ckpt_dir is set)."""
+        return ckpt_dir is not None and (end == rounds
+                                         or end % ckpt_every == 0)
+
+    def snapshot_host():
+        """Host-side carry at 'all draws for blocks <= i done' — called
+        on the prefetch producer right after block i's sampling, so a
+        resume continues the rng/pool/policy streams exactly where the
+        uninterrupted run's producer would."""
+        snap = {"rng": copy.deepcopy(rng.bit_generator.state)}
+        if pooled:
+            snap["pool"] = pool.host_state()
+        policy_state = sampling.state_dict()
+        if policy_state:
+            snap["sampling"] = policy_state
+        return snap
+
+    host_snaps: Dict[int, dict] = {}
+    writer = (AsyncCheckpointWriter(ckpt_dir, keep=ckpt_keep)
+              if ckpt_dir is not None and ckpt_async and blocks else None)
     device = single_device_of(phi)       # staging target for the prefetcher
     if strategy.meters_comm:
         # per-round payloads repeat with the channel's rotation period
@@ -1253,6 +1365,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                 for k, v in batch.items()}
         target = (block_shardings(mesh, CLIENT_AXIS, (sched, batch))
                   if mesh is not None else device)
+        if ckpt_at(end):
+            host_snaps[end] = snapshot_host()
         return part, cohort, jax.device_put((sched, batch), target)
 
     staged_iter = prefetch_items(stage, len(blocks), depth=prefetch)
@@ -1288,8 +1402,28 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                 if strategy.tracks_inner_loss:
                     ev["inner_loss"] = float(round_losses[blk - 1])
                 history.append(ev)
+            if ckpt_at(end):
+                # block-boundary COPIES: the live carry is donated to
+                # the next block, so the snapshot dispatches a device
+                # copy (async, off the host critical path) and hands
+                # THAT to the writer thread for the D2H transfer
+                state = RoundState(
+                    round=end, phi=_snapshot_copy(phi),
+                    pool_state=(_snapshot_copy(pool_state)
+                                if pooled else None),
+                    per_client_bytes=per_client_bytes.copy(),
+                    comm_bytes=comm_bytes, history=list(history),
+                    host=host_snaps.pop(end), fingerprint=fingerprint)
+                if writer is not None:
+                    writer.submit_state(state)
+                else:
+                    save_round_state(ckpt_dir, state, keep=ckpt_keep)
+        if writer is not None:
+            writer.close()      # drain pending snapshots; surface errors
     finally:
         staged_iter.close()
+        if writer is not None:
+            writer.close(raise_errors=False)
 
     out = {"params": phi, "history": history}
     if strategy.meters_comm:

@@ -48,32 +48,48 @@ import numpy as np
 SAMPLERS = ("reference", "vectorized")
 
 
-def plan_blocks(rounds: int, eval_every: int,
-                max_block: int) -> Tuple[List[Tuple[int, int]], int]:
+def plan_blocks(rounds: int, eval_every: int, max_block: int, *,
+                start: int = 0,
+                ckpt_every: int = 0) -> Tuple[List[Tuple[int, int]], int]:
     """Split ``rounds`` into scan blocks; return ``(blocks, pad)``.
 
     ``blocks`` is a list of ``(start, end)`` half-open round ranges that
-    cover ``[0, rounds)``, cut at every eval boundary (multiples of
-    ``eval_every``) and at most ``max_block`` rounds long. ``pad`` is the
-    single fixed length every block is padded to on the host —
-    ``min(max_block, stride, rounds)`` where ``stride`` is the eval
-    cadence — so one run uses exactly one block shape regardless of
-    ``rounds % eval_every`` or the tail.
+    cover ``[start, rounds)``, cut at every eval boundary (multiples of
+    ``eval_every``), at every checkpoint boundary (multiples of
+    ``ckpt_every``, when > 0 — snapshots must land on block ends), and
+    at most ``max_block`` rounds long. ``pad`` is the single fixed
+    length every block is padded to on the host —
+    ``min(max_block, stride, ckpt_every, rounds)`` where ``stride`` is
+    the eval cadence — so one run uses exactly one block shape
+    regardless of ``rounds % eval_every`` or the tail.
+
+    ``start`` > 0 fast-forwards the plan (the checkpoint-resume path):
+    cuts are at ABSOLUTE round positions, so resuming from a block
+    boundary replays exactly the uninterrupted run's remaining blocks.
+    Block splitting itself is bitwise-neutral — the scan executes the
+    same per-round ops in the same order however ``[start, rounds)`` is
+    chunked — which is what lets checkpoint cuts and resume replans
+    preserve bit-for-bit parity.
     """
     if max_block <= 0:
         raise ValueError(f"max_block must be positive, got {max_block!r}")
-    if rounds <= 0:
+    if start < 0:
+        raise ValueError(f"start must be >= 0, got {start!r}")
+    if rounds <= start:
         return [], 0
     stride = eval_every if eval_every else rounds
     blocks: List[Tuple[int, int]] = []
-    rnd = 0
+    rnd = start
     while rnd < rounds:
-        eval_boundary = min(rounds, (rnd // stride + 1) * stride)
-        end = min(eval_boundary, rnd + max_block)
+        end = min(rounds, (rnd // stride + 1) * stride, rnd + max_block)
+        if ckpt_every:
+            end = min(end, (rnd // ckpt_every + 1) * ckpt_every)
         blocks.append((rnd, end))
         rnd = end
     pad = min(max_block, stride, rounds)
-    assert all(end - start <= pad for start, end in blocks)
+    if ckpt_every:
+        pad = min(pad, ckpt_every)
+    assert all(end - s <= pad for s, end in blocks)
     return blocks, pad
 
 
@@ -329,6 +345,20 @@ class SamplingPolicy:
         return task_dist.sample_support_block_reference(
             rng, rounds, clients, support, data_mode,
             participation=participation)
+
+    def state_dict(self) -> Dict:
+        """JSON-able cross-block host state, captured into round-state
+        checkpoints (repro.checkpoint) so a resumed run continues the
+        policy exactly where the interrupted one stopped. Stateless
+        policies — every shipped one except
+        ``repro.core.pool.MarkovAvailability``, whose two-state chain
+        lives outside the rng stream — return {}."""
+        return {}
+
+    def load_state_dict(self, state: Dict, rng=None) -> None:
+        """Restore a ``state_dict`` snapshot at resume. ``rng`` is the
+        run's (already-restored) host generator, for policies whose
+        stashed state is keyed by the stream driving it."""
 
     def _validate_sampler(self):
         if self.sampler not in SAMPLERS:

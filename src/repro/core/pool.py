@@ -36,6 +36,7 @@ strictly additive.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Callable, Dict, Optional
 
@@ -211,6 +212,26 @@ class ClientPool:
             self._rngs[i] = np.random.default_rng(
                 [self.seed, _DATA_STREAM, i])
         return self._rngs[i]
+
+    def host_state(self) -> Dict:
+        """JSON-able snapshot of the pool's mutable host state: the
+        per-client data rng streams that have advanced past their seed
+        (one bit-generator state per client that ever checked in).
+        Tasks and templates are NOT captured — they are pure functions
+        of ``(seed, i)`` and rematerialize on demand. Paired with
+        :meth:`load_host_state` for bit-for-bit checkpoint resume."""
+        return {"rngs": {str(i): copy.deepcopy(g.bit_generator.state)
+                         for i, g in self._rngs.items()}}
+
+    def load_host_state(self, state: Dict) -> None:
+        """Restore a :meth:`host_state` snapshot: every captured client
+        rng resumes mid-stream; clients absent from the snapshot fall
+        back to their fresh seeded stream (they had never checked in)."""
+        self._rngs = {}
+        for key, st in (state or {}).get("rngs", {}).items():
+            g = np.random.default_rng()
+            g.bit_generator.state = st
+            self._rngs[int(key)] = g
 
     def _template(self, support: int, data_mode: str):
         """Zero-cost shape probe: one throwaway draw from client 0's
@@ -465,3 +486,26 @@ class MarkovAvailability(AvailabilityProcess):
             rows[r] = state
         self._chain[:] = [rng, pool_size, end, state.copy()]
         return rows
+
+    def state_dict(self):
+        """The in-flight chain (pool size, next expected block start,
+        per-client on/off booleans) — the one piece of policy state the
+        restored rng stream alone cannot rebuild, captured into
+        round-state checkpoints. {} when no trajectory is in flight."""
+        if not self._chain:
+            return {}
+        return {"pool_size": int(self._chain[1]),
+                "next_start": int(self._chain[2]),
+                "state": np.asarray(self._chain[3], bool).tolist()}
+
+    def load_state_dict(self, state, rng=None):
+        """Prime the chain stash from a ``state_dict`` snapshot so the
+        resumed run's first block (``start == next_start``) continues
+        the interrupted trajectory; ``rng`` must be the run's restored
+        host generator (the stash is keyed by stream identity)."""
+        if not state:
+            self._chain.clear()
+            return
+        self._chain[:] = [rng, int(state["pool_size"]),
+                          int(state["next_start"]),
+                          np.asarray(state["state"], bool)]

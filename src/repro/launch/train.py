@@ -135,11 +135,18 @@ def parse_args(argv=None):
                          "mode: inner SGD per pod, one cross-pod "
                          "all-reduce per round); 'none' (default) "
                          "stays single-device")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="snapshot directory: the LM launcher saves phi "
+                         "every --ckpt-every rounds; engine strategies "
+                         "snapshot the FULL round state (phi, pool "
+                         "state, rng, bills) on a background thread and "
+                         "resume bit-for-bit via --resume")
+    ap.add_argument("--ckpt-every", type=positive_int_arg, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume restores from --ckpt-dir; pass both")
     if args.availability != "iid" and args.participation < 1.0:
         ap.error("--availability replaces the i.i.d. --participation "
                  "schedule; pass one or the other")
@@ -168,10 +175,6 @@ def parse_args(argv=None):
         ap.error(f"--strategy {args.strategy} shards the client axis "
                  f"via --devices N alone; --mesh data|pod belongs to "
                  f"the LM launcher")
-    if args.ckpt_dir or args.resume:
-        ap.error("checkpointing (--ckpt-dir/--resume) belongs to the LM "
-                 "launcher; engine strategies run to completion in one "
-                 "process")
     if args.strategy == "transfer" and args.buffer_size:
         ap.error("--strategy transfer uplinks raw client batches "
                  "(uplink_ref='none'); the FedBuff buffer stages "
@@ -202,7 +205,10 @@ def run_engine_strategy(args):
     SamplingPolicy, --buffer-size -> BufferedAggregation, --devices ->
     client mesh). tifed runs integer-only local training and bills its
     native int8 uplinks; everything else is the fp32 engine path.
-    Prints one summary JSON row."""
+    --ckpt-dir arms the engine's round-state snapshotter (background
+    writer, every --ckpt-every rounds) and --resume continues a
+    preempted run bit-for-bit — including past the original --rounds
+    horizon. Prints one summary JSON row."""
     import functools
 
     from repro.configs.paper_models import SINE_MLP
@@ -249,7 +255,8 @@ def run_engine_strategy(args):
         eval_kwargs=dict(num_tasks=5, support=10, k_steps=16, lr=eval_lr,
                          query=20),
         channel=channel, sampling=sampling, pool=pool, buffered=buffered,
-        mesh=args.devices)
+        mesh=args.devices, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, resume=args.resume)
     jax.block_until_ready(jax.tree.leaves(out["params"])[0])
     row = {"strategy": args.strategy, "rounds": args.rounds,
            "clients": args.clients, "dt_s": round(time.time() - t0, 3)}

@@ -1,0 +1,3 @@
+"""Test-support utilities shipped with the library (importable from
+tests AND from subprocess children): fault injection for the
+preemption-safety layer lives in repro.testing.faults."""

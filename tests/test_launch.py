@@ -171,7 +171,8 @@ assert abs(row["comm_mb"] - 2 * 4 * 4 * n_params / 2 ** 20) < 1e-3
 bads = (
     ["--strategy", "tifed", "--arch", "tinyllama-1.1b"],
     ["--strategy", "tifed", "--mesh", "data"],
-    ["--strategy", "tifed", "--ckpt-dir", "/tmp/x"],
+    ["--strategy", "tifed", "--ckpt-every", "0"],
+    ["--strategy", "tifed", "--resume"],            # no --ckpt-dir
     ["--strategy", "transfer", "--buffer-size", "2"],
     ["--strategy", "reptile", "--buffer-size", "2"],   # no --pool-size
     ["--strategy", "reptile", "--availability", "diurnal"],
@@ -186,6 +187,34 @@ for bad in bads:
 print("engine strategy launcher ok")
 """, devices=2)
     assert "engine strategy launcher ok" in out
+
+
+def test_train_launcher_engine_ckpt_resume():
+    """--ckpt-dir/--resume on the ENGINE path (PR 7): a run leaves
+    durable ckpt_*.npz snapshots, and --resume with a larger --rounds
+    continues past the original horizon and prints the new summary row."""
+    out = _run("""
+import json, os, subprocess, sys, tempfile
+env = dict(os.environ)
+d = tempfile.mkdtemp()
+base = [sys.executable, "-m", "repro.launch.train", "--strategy",
+        "reptile", "--clients", "2", "--ckpt-dir", d,
+        "--ckpt-every", "2"]
+r = subprocess.run(base + ["--rounds", "4"], capture_output=True,
+                   text=True, env=env, timeout=400)
+assert r.returncode == 0, r.stderr[-2000:]
+names = sorted(n for n in os.listdir(d) if n.endswith(".npz"))
+assert names and names[-1] == "ckpt_00000004.npz", names
+r = subprocess.run(base + ["--rounds", "6", "--resume"],
+                   capture_output=True, text=True, env=env, timeout=400)
+assert r.returncode == 0, r.stderr[-2000:]
+rows = [json.loads(l) for l in r.stdout.splitlines() if l.startswith("{")]
+assert len(rows) == 1 and rows[0]["rounds"] == 6, r.stdout
+names = sorted(n for n in os.listdir(d) if n.endswith(".npz"))
+assert names[-1] == "ckpt_00000006.npz", names
+print("launcher ckpt resume ok")
+""", devices=2)
+    assert "launcher ckpt resume ok" in out
 
 
 def test_pod_client_meta_step():
