@@ -35,6 +35,15 @@ baseline at the SAME cohort/model/support/epochs. Floors: tifed
 pipelined rounds/sec >= 1.5x fp32 reptile pipelined, uplink bytes at
 the int8 rate (0.25x the fp32 bill), trace_count 1.
 
+A "pool_scale" section (PR 8) sweeps the persistent-fleet size N in
+{256, 10^4, 10^6} at a fixed cohort of 256 (vectorized counter-derived
+identity, host-resident slabs): rounds/sec per N plus a live
+host-memory meter (repro.metering.memory.MemoryMeter) and the size of
+the pool's compact host snapshot. Floor: the N=10^6 run stays within
+1.2x of the N=256 run's rounds/sec — per-round host work is O(cohort),
+and the only O(N) residual is the int32 identity (16 bytes/client:
+check-in counter + 3 slab fields).
+
 A "mesh_scaling" section (PR 5) sweeps cohort size x device count for
 the client-sharded engine (run_federated(mesh=...)) on a wider sine
 MLP with a longer support stream, demonstrated on CPU CI under
@@ -442,6 +451,53 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
             pool_sec[name]["rounds_per_sec"]
             / pool_sec["legacy_uniform"]["rounds_per_sec"], 2)
     results["pool_async"] = pool_sec
+
+    # -- pool_scale: the fleet-size sweep (PR 8) ------------------------
+    # Fixed cohort (256), fleet size N in {256, 1e4, 1e6}: with the
+    # counter-derived identity and host-resident slabs, per-round host
+    # work is O(cohort), so rounds/sec must be flat in N (floor: 1e6
+    # within 1.2x of 256). TinyReptile keeps the device step light so
+    # host-side scaling regressions cannot hide behind client compute.
+    from repro.core import run_federated as _rf
+    from repro.metering.memory import MemoryMeter
+    scale_rounds = 8 if smoke else min(rounds, 24)
+    scale_sec = {"cohort": 256, "rounds": scale_rounds}
+    scale_rps = {}
+    for n in (256, 10_000, 1_000_000):
+        pool = ClientPool(dist, n, seed=0, sampler="vectorized",
+                          residency="host")
+        meter = MemoryMeter()
+
+        def run_scale(pool=pool):
+            out = _rf(params, dist,
+                      TinyReptileStrategy(LOSS, use_pallas=None),
+                      rounds=scale_rounds, clients_per_round=256,
+                      alpha=1.0, beta=0.02, support=8, seed=0,
+                      **pipe_kw, pool=pool)
+            jax.block_until_ready(jax.tree.leaves(out["params"])[0])
+
+        rps = _rounds_per_sec(run_scale, scale_rounds,
+                              reps=2 if smoke else 3)
+        mem = meter.report()
+        snap = pool.host_state()
+        scale_rps[n] = rps
+        scale_sec[f"n_{n}"] = {
+            "rounds_per_sec": round(rps, 2),
+            # the analytic O(N) residual: per-client int32 identity
+            "identity_int32_mb": round(16 * n / 2 ** 20, 2),
+            # measured growth since this size's baseline (upper bound:
+            # ru_maxrss is a process-lifetime high-water mark)
+            "host_current_growth_mb": round(
+                mem["host_current_growth_bytes"] / 2 ** 20, 1),
+            "host_peak_growth_mb": round(
+                mem["host_peak_growth_bytes"] / 2 ** 20, 1),
+            "snapshot_entries": len(snap["checkins"]),
+        }
+        rows.append((f"engine/pool_scale_n{n}", 1e6 / rps,
+                     f"rounds_per_sec={rps:.1f}"))
+    scale_sec["n256_over_n1000000"] = round(
+        scale_rps[256] / scale_rps[1_000_000], 3)
+    results["pool_scale"] = scale_sec
 
     # -- checkpoint overhead: async round-state snapshots (PR 7) --------
     # The preemption-safety tentpole must be ~free on the round engine's

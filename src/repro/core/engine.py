@@ -1137,7 +1137,13 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     if channel is None:
         channel = CommChannel()
     if sampling is None:
-        sampling = UniformSampling(sampler)
+        # a pooled run's host-path contract is the POOL's sampler: a
+        # vectorized (fleet-scale) pool must also seat cohorts through
+        # the O(cohort) block path, not the per-round O(N) choice loop
+        if pool is not None and sampler == "reference":
+            sampling = UniformSampling(pool.sampler)
+        else:
+            sampling = UniformSampling(sampler)
     elif sampler != "reference":
         # an explicit policy owns its own sampler choice; silently
         # ignoring a non-default `sampler=` string would run a different
@@ -1174,11 +1180,50 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             f"simulates_quantization={channel.simulates_quantization})")
     mesh = _resolve_mesh(mesh)
     shards = int(mesh.devices.size) if mesh is not None else 1
+    # a mesh spanning >1 process (jax.distributed) changes only HOW
+    # arrays move: every process runs this same host loop on the same
+    # seed (plans, rng draws, and bills are process-replicated), each
+    # contributes its addressable shard at staging, and device->host
+    # reads of client-sharded state go through a replicating collective
+    multiproc = (mesh is not None and
+                 len({d.process_index for d in mesh.devices.flat}) > 1)
+
+    def stage_tree(tree, target):
+        """device_put — or, cross-host, per-leaf global-array assembly
+        from the process-replicated host copy (device_put cannot build
+        an array it only partially addresses)."""
+        if not multiproc:
+            return jax.device_put(tree, target)
+        return jax.tree.map(
+            lambda x, s: jax.make_array_from_callback(
+                np.shape(x), s, lambda idx, _x=np.asarray(x): _x[idx]),
+            tree, target)
+
+    def fetch_tree(tree):
+        """device_get — or, cross-host, an all-gather into replicated
+        form first (client-sharded leaves are not fully addressable
+        from any one process). The gather is a collective: every
+        process calls this at the same points, which the lockstep host
+        loop guarantees."""
+        if not multiproc:
+            return jax.device_get(tree)
+        rep = jax.jit(
+            lambda t: t,
+            out_shardings=jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), tree))(tree)
+        return jax.tree.map(np.asarray, rep)
     # mesh runs pad the cohort to a multiple of the shard count: the
     # pad slots are permanently scheduled out (participation False,
     # weight 0, zero batch) so every device sees an equal shard and the
     # validity-mask machinery keeps them inert
     c_pad = -(-clients_per_round // shards) * shards
+    # residency="host" pools keep the (N,) identity arrays in host
+    # slabs; the device carries only a fixed gathered WINDOW of the
+    # rows each block actually touches (O(block cohort), not O(N)) —
+    # the producer remaps cohort indices window-local, the consumer
+    # stages the window before each block and scatters it back after
+    host_resident = pooled and pool.residency == "host"
+    slabs = pool.init_slabs(shards=shards) if host_resident else None
     rng = np.random.default_rng(seed)
     # private copy: the block runner donates its phi argument, and the
     # caller's init_params must stay usable (they are reused across runs)
@@ -1221,6 +1266,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             "support": int(support), "shards": int(shards),
             "strategy": type(strategy).__name__,
             "pool_size": int(pool.size) if pooled else 0,
+            "pool_sampler": pool.sampler if pooled else "",
+            "policy_sampler": getattr(sampling, "sampler", "reference"),
             "buffered": buffered is not None}
     elif resume:
         raise ValueError("resume=True needs ckpt_dir= to restore from")
@@ -1260,17 +1307,41 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             sampling.load_state_dict(saved.host.get("sampling", {}),
                                      rng=rng)
             logger.info("resumed %s from round %d", ckpt_dir, start_round)
-    if mesh is not None:
-        phi = jax.device_put(phi, NamedSharding(mesh, P()))
-    if mesh is not None and pooled:
-        pool_state = jax.device_put(
-            pool_state,
-            jax.tree.map(lambda s: NamedSharding(mesh, s),
-                         pool_state_specs(pool_state, CLIENT_AXIS),
-                         is_leaf=lambda x: isinstance(x, P)))
     blocks, pad = plan_blocks(rounds, eval_every, max_block,
                               start=start_round,
                               ckpt_every=ckpt_every if ckpt_dir else 0)
+    if host_resident:
+        # flush the full (possibly just-restored) identity into the
+        # host slabs, then shrink the device carry to the gathered
+        # window: one row per DISTINCT client a block can seat (a block
+        # has pad rounds of c_pad slots), fixed for the whole run so
+        # the runner still compiles once
+        n_full = len(slabs["last_seen"])
+        pool.scatter_rows(
+            np.arange(n_full),
+            {f: np.asarray(getattr(pool_state, f))
+             for f in ClientPool.SLAB_FIELDS})
+        slab_rows = min(n_full, -(-pad * c_pad // shards) * shards)
+        win = pool.init_state(
+            phi, c_pad, buffered, shards=shards,
+            template=uplink_template(phi) if uplink_template else None,
+            rows=slab_rows)
+        # identity rows are re-staged from the slabs every block; the
+        # FedBuff buffer is SERVER state and carries over (restored
+        # buffers survive the shrink)
+        pool_state = PoolState(
+            win.last_seen, win.staleness, win.checkins,
+            pool_state.buf_updates, pool_state.buf_round,
+            pool_state.buf_count, pool_state.flushes)
+    if mesh is not None:
+        phi = jax.device_put(phi, NamedSharding(mesh, P()))
+    if mesh is not None and pooled:
+        pool_state = stage_tree(
+            jax.tree.map(np.asarray, pool_state) if multiproc
+            else pool_state,
+            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         pool_state_specs(pool_state, CLIENT_AXIS),
+                         is_leaf=lambda x: isinstance(x, P)))
 
     def ckpt_at(end):
         """Deterministic snapshot predicate, shared by the producer's
@@ -1321,11 +1392,27 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             cohort = np.asarray(plan["cohort"], np.int32)
             batch = pool.sample_cohort_block(cohort, part, support,
                                              strategy.data_mode)
+            if host_resident:
+                # remap global cohort ids to window-local rows: the
+                # sorted distinct participants seat the window prefix,
+                # searchsorted inverts the map. Non-participant slots
+                # clamp into range (they are masked in-scan) and
+                # billing keeps the GLOBAL ids.
+                uniq = np.unique(cohort[part]).astype(np.int64)
+                if uniq.size:
+                    local = np.searchsorted(uniq, cohort).astype(np.int32)
+                    np.clip(local, 0, uniq.size - 1, out=local)
+                else:
+                    local = np.zeros_like(cohort)
+                sched_cohort = local
+            else:
+                uniq = None
+                sched_cohort = cohort
         else:
             plan = sampling.plan_schedule(rng, start, end,
                                           clients_per_round, budget)
             part = np.asarray(plan["participation"], bool)
-            cohort = None
+            cohort = uniq = sched_cohort = None
             batch = sampling.sample_block(task_dist, rng, blk,
                                           clients_per_round, support,
                                           strategy.data_mode,
@@ -1352,7 +1439,7 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             participation=pad_rows(part, bool),
             local_steps=pad_rows(plan["local_steps"], np.int32),
             weights=pad_rows(plan["weights"], np.float32),
-            cohort=pad_rows(cohort, np.int32) if pooled else None)
+            cohort=pad_rows(sched_cohort, np.int32) if pooled else None)
         batch = {k: np.asarray(v) for k, v in batch.items()}
         if c_pad > clients_per_round:
             batch = {k: np.concatenate(
@@ -1367,17 +1454,46 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   if mesh is not None else device)
         if ckpt_at(end):
             host_snaps[end] = snapshot_host()
-        return part, cohort, jax.device_put((sched, batch), target)
+        return part, cohort, uniq, stage_tree((sched, batch), target)
+
+    id_sharding = (NamedSharding(mesh, P(CLIENT_AXIS))
+                   if mesh is not None else device)
+
+    def stage_window(uniq):
+        """Gather the block's identity rows from the host slabs onto
+        device (window prefix = the block's distinct participants, tail
+        rows inert). Runs on the CONSUMER, after the previous block's
+        write-back — the prefetch thread never races the slabs."""
+        uniq_pad = np.zeros(slab_rows, np.int64)
+        uniq_pad[:uniq.size] = uniq
+        rows = pool.gather_rows(uniq_pad)
+        rows = tuple(rows[f] for f in ClientPool.SLAB_FIELDS)
+        return stage_tree(rows, (None if id_sharding is None else
+                                 tuple(id_sharding for _ in rows)))
 
     staged_iter = prefetch_items(stage, len(blocks), depth=prefetch)
     try:
-        for (start, end), (part, cohort, staged) in zip(blocks, staged_iter):
+        for (start, end), (part, cohort, uniq, staged) in zip(blocks,
+                                                              staged_iter):
             sched_d, batch_d = staged
+            if host_resident:
+                ls, st, ck = stage_window(uniq)
+                pool_state = PoolState(
+                    ls, st, ck, pool_state.buf_updates,
+                    pool_state.buf_round, pool_state.buf_count,
+                    pool_state.flushes)
             if pooled:
                 phi, pool_state, round_losses = run_block(
                     phi, pool_state, sched_d, batch_d)
             else:
                 phi, round_losses = run_block(phi, sched_d, batch_d)
+            if host_resident and uniq.size:
+                got = fetch_tree(
+                    tuple(getattr(pool_state, f)
+                          for f in ClientPool.SLAB_FIELDS))
+                pool.scatter_rows(
+                    uniq, {f: np.asarray(g)[:uniq.size] for f, g in
+                           zip(ClientPool.SLAB_FIELDS, got)})
             blk = end - start
             if strategy.meters_comm:
                 # bill downlink + uplink per participating client, at the
@@ -1393,7 +1509,13 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                     per_client_bytes += (2 * payloads[:, None] * part).sum(0)
                 comm_bytes += int((2 * payloads * part.sum(axis=1)).sum())
             if eval_every and end % eval_every == 0:
-                ev = evaluate_init(strategy.loss_fn, phi, task_dist,
+                # cross-host: run the eval protocol on a LOCAL numpy
+                # copy of the replicated phi, so it stays a per-process
+                # computation (identical on every process) instead of a
+                # collective
+                eval_phi = (jax.tree.map(np.asarray, phi) if multiproc
+                            else phi)
+                ev = evaluate_init(strategy.loss_fn, eval_phi, task_dist,
                                    np.random.default_rng(10_000 + end - 1),
                                    **(eval_kwargs or {}))
                 ev["round"] = end
@@ -1407,14 +1529,37 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                 # the next block, so the snapshot dispatches a device
                 # copy (async, off the host critical path) and hands
                 # THAT to the writer thread for the D2H transfer
+                # cross-host snapshots materialize to host numpy HERE
+                # (the replicating fetch is a collective every process
+                # must join); single-process runs keep the async device
+                # copy. Only process 0 touches the filesystem.
+                snap_copy = fetch_tree if multiproc else _snapshot_copy
+                if host_resident:
+                    # checkpoints always carry the FULL (N,) layout —
+                    # identity straight from the host slabs (post
+                    # write-back), buffer leaves device-copied — so
+                    # snapshots restore into either residency
+                    pool_snap = PoolState(
+                        *(np.array(slabs[f])
+                          for f in ClientPool.SLAB_FIELDS),
+                        *(snap_copy((
+                            pool_state.buf_updates, pool_state.buf_round,
+                            pool_state.buf_count, pool_state.flushes))))
+                elif pooled:
+                    pool_snap = snap_copy(pool_state)
+                else:
+                    pool_snap = None
                 state = RoundState(
-                    round=end, phi=_snapshot_copy(phi),
-                    pool_state=(_snapshot_copy(pool_state)
-                                if pooled else None),
+                    round=end,
+                    phi=(jax.tree.map(np.asarray, phi) if multiproc
+                         else _snapshot_copy(phi)),
+                    pool_state=pool_snap,
                     per_client_bytes=per_client_bytes.copy(),
                     comm_bytes=comm_bytes, history=list(history),
                     host=host_snaps.pop(end), fingerprint=fingerprint)
-                if writer is not None:
+                if multiproc and jax.process_index() != 0:
+                    pass                 # peers only joined the fetch
+                elif writer is not None:
                     writer.submit_state(state)
                 else:
                     save_round_state(ckpt_dir, state, keep=ckpt_keep)
@@ -1428,15 +1573,20 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     out = {"params": phi, "history": history}
     if strategy.meters_comm:
         out["comm_bytes"] = comm_bytes
-        out["per_client_bytes"] = [int(b) for b in per_client_bytes]
+        # C-level tolist(), not a per-element int() loop: the bill has
+        # pool.size entries, and a million-client fleet pays ~100ms for
+        # the boxing loop vs ~10ms here
+        out["per_client_bytes"] = per_client_bytes.tolist()
     if pooled:
-        ps = jax.device_get(pool_state)
+        ps = fetch_tree(pool_state)
         # [:pool.size] drops the mesh shard-padding rows (a no-op slice
-        # on unsharded runs)
+        # on unsharded runs); host-resident identity reads from the
+        # slabs (the device window only holds the last block's rows)
+        ident = (slabs if host_resident else
+                 {f: getattr(ps, f) for f in ClientPool.SLAB_FIELDS})
         out["pool_state"] = {
-            "last_seen": np.asarray(ps.last_seen)[:pool.size],
-            "staleness": np.asarray(ps.staleness)[:pool.size],
-            "checkins": np.asarray(ps.checkins)[:pool.size]}
+            f: np.array(ident[f][:pool.size])
+            for f in ClientPool.SLAB_FIELDS}
         if buffered is not None:
             out["pool_state"]["flushes"] = int(ps.flushes)
             # scalar off-mesh; per-shard fill levels (shards,) on mesh

@@ -216,6 +216,40 @@ def prefetch_items(produce: Callable[[int], object], n: int,
         pf.close()
 
 
+def seat_cohorts(rng, pool_size: int, clients: int,
+                 rows: int) -> np.ndarray:
+    """Uniform without-replacement cohort seating in O(rows * clients)
+    host work, independent of ``pool_size``.
+
+    ``Generator.choice(n, k, replace=False)`` permutes the full
+    population internally — at n=10^6 with k=256 seats that is ~4000x
+    more work than the seats drawn, and it dominated pooled-run
+    planning at fleet scale. For sparse draws (k << n) rejection
+    sampling touches O(k) candidates per row (expected collisions
+    ~k^2/2n, vanishing as n grows); near-dense rows (8k >= n) keep the
+    permutation draw, which is optimal there. Consumes ``rng``
+    deterministically in row order — a NEW stream contract for the
+    ``sampler="vectorized"`` path (``sampler="reference"`` keeps the
+    legacy per-round ``choice`` order bit-for-bit)."""
+    out = np.empty((rows, clients), np.int32)
+    if clients * 8 >= pool_size:
+        for r in range(rows):
+            out[r] = rng.choice(pool_size, size=clients, replace=False)
+        return out
+    for r in range(rows):
+        seen = set()
+        seats = []
+        while len(seats) < clients:
+            draw = rng.integers(pool_size,
+                                size=clients - len(seats)).tolist()
+            for cand in draw:
+                if cand not in seen:
+                    seen.add(cand)
+                    seats.append(cand)
+        out[r] = seats
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class ClientSchedule:
     """Per-round, per-client round state threaded through the block scan.
@@ -324,9 +358,14 @@ class SamplingPolicy:
             raise ValueError(f"pool_size={pool_size} is smaller than the "
                              f"cohort ({clients} slots): persistent "
                              f"clients cannot repeat within a round")
-        cohort = np.stack([rng.choice(pool_size, size=clients, replace=False)
-                           for _ in range(blk)]) if blk else \
-            np.zeros((0, clients), np.int64)
+        if not blk:
+            cohort = np.zeros((0, clients), np.int64)
+        elif self.sampler == "vectorized":
+            cohort = seat_cohorts(rng, pool_size, clients, blk)
+        else:
+            cohort = np.stack([
+                rng.choice(pool_size, size=clients, replace=False)
+                for _ in range(blk)])
         plan = self.plan_schedule(rng, start, end, clients, budget)
         plan["cohort"] = cohort.astype(np.int32)
         return plan

@@ -36,21 +36,34 @@ strictly additive.
 """
 from __future__ import annotations
 
+import collections
 import copy
 import dataclasses
+import os
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import SamplingPolicy
+from repro.core.pipeline import SAMPLERS, SamplingPolicy
 from repro.data.tasks import TaskDistribution
 
 #: stream-key constants: keep a pool's task seeds, per-client data
-#: streams, and shape probes on disjoint rng streams.
+#: streams, and shape probes on disjoint rng streams. _TASK_STREAM is
+#: the ``materialize_client`` derivation (data/tasks.py) — the
+#: vectorized sampler re-derives it per check-in instead of caching the
+#: task object.
 _DATA_STREAM = 0x5EED
 _PROBE_STREAM = 0x9
+_TASK_STREAM = 0x9E37
+
+#: bound on the (support, data_mode) shape-template cache — a run uses
+#: one or two keys; the bound only guards pathological callers.
+_MAX_TEMPLATES = 16
+
+#: residency of the per-client identity arrays (see ClientPool).
+RESIDENCIES = ("device", "host")
 
 
 def default_staleness_weight(tau):
@@ -171,64 +184,169 @@ class ClientPool:
     """A population of ``size`` persistent clients over a task
     distribution.
 
-    Host side (this class): each client's STABLE task is materialized
-    lazily from ``(seed, i)`` via ``task_dist.materialize_client``; each
-    client owns a private data rng advanced only at its own check-ins,
-    so its sample sequence is a function of its check-in count alone.
+    Host side (this class): each client's STABLE task derives from
+    ``(seed, i)`` via ``task_dist.materialize_client``, and each
+    client's data stream advances only at its own check-ins, so its
+    sample sequence is a function of its check-in count alone.
     ``sample_cohort_block`` draws a block of cohort data in strict block
     order (the prefetch thread's determinism contract).
+
+    Two host-identity representations:
+
+    - ``sampler="reference"`` (default, legacy bit-for-bit): one cached
+      task object and one live ``np.random.Generator`` per client that
+      ever checked in — O(active clients) host objects, generators
+      never evictable (their stream state is irreplaceable).
+    - ``sampler="vectorized"``: NO per-client host objects. The pool
+      keeps ONE ``(N,)`` int32 check-in counter array; client ``i``'s
+      ``k``-th check-in draws from the counter-derived streams
+      ``default_rng([seed, _TASK_STREAM, i])`` (task params — the
+      ``materialize_client`` derivation) and ``default_rng([seed,
+      _DATA_STREAM, i, k])`` (data), routed through
+      ``TaskDistribution.sample_client_support``. Host memory is
+      O(cohort) per round plus the counters; ``host_state()`` shrinks
+      from a dict of bit-generator states to the nonzero counters.
+      A NEW deterministic stream contract (same precedent as the
+      engine's vectorized block sampler), not bit-equal to reference.
+
+    ``residency="host"`` additionally keeps the per-client
+    :class:`PoolState` identity arrays in host slabs (optionally
+    memory-mapped under ``mmap_dir``): the engine stages only the
+    cohort's rows to device each block and scatters them back after —
+    see ``init_slabs`` / ``gather_rows`` / ``scatter_rows``.
 
     Device side: ``init_state`` builds the :class:`PoolState` pytree the
     engine threads through the block-runner scan.
     """
 
+    #: host-slab field names, mirroring PoolState's per-client arrays.
+    SLAB_FIELDS = ("last_seen", "staleness", "checkins")
+
     def __init__(self, task_dist: TaskDistribution, size: int,
-                 seed: int = 0):
+                 seed: int = 0, *, sampler: str = "reference",
+                 residency: str = "device",
+                 mmap_dir: Optional[str] = None,
+                 max_cached_tasks: int = 4096):
         if size < 1:
             raise ValueError(f"pool size must be >= 1, got {size!r}")
+        if sampler not in SAMPLERS:
+            raise ValueError(f"unknown sampler {sampler!r}; expected "
+                             f"one of {SAMPLERS}")
+        if residency not in RESIDENCIES:
+            raise ValueError(f"unknown residency {residency!r}; "
+                             f"expected one of {RESIDENCIES}")
+        if mmap_dir is not None and residency != "host":
+            raise ValueError("mmap_dir only applies to residency='host' "
+                             "(device-resident pools have no host slabs "
+                             "to back with files)")
+        if not (isinstance(max_cached_tasks, int)
+                and max_cached_tasks >= 1):
+            raise ValueError(f"max_cached_tasks must be an int >= 1, "
+                             f"got {max_cached_tasks!r}")
         self.task_dist = task_dist
         self.size = int(size)
         self.seed = int(seed)
-        self._tasks: Dict[int, object] = {}
+        self.sampler = sampler
+        self.residency = residency
+        self.mmap_dir = mmap_dir
+        self.max_cached_tasks = int(max_cached_tasks)
+        self._tasks: "collections.OrderedDict[int, object]" = \
+            collections.OrderedDict()
         self._rngs: Dict[int, np.random.Generator] = {}
-        self._templates: Dict[tuple, tuple] = {}
+        self._templates: "collections.OrderedDict[tuple, tuple]" = \
+            collections.OrderedDict()
+        #: vectorized-sampler identity: client i's next check-in index.
+        self._checkins = (np.zeros(self.size, np.int32)
+                          if sampler == "vectorized" else None)
+        self._slabs: Optional[Dict[str, np.ndarray]] = None
 
     def __repr__(self):
         return (f"ClientPool({type(self.task_dist).__name__}, "
-                f"size={self.size}, seed={self.seed})")
+                f"size={self.size}, seed={self.seed}, "
+                f"sampler={self.sampler!r}, residency={self.residency!r})")
 
     def client_task(self, i: int):
-        """Pool client ``i``'s stable task (materialized once, cached)."""
+        """Pool client ``i``'s stable task. Cached in a bounded LRU
+        (``max_cached_tasks``): tasks are pure functions of
+        ``(seed, i)``, so eviction only costs rematerialization — a
+        long-lived million-client pool no longer accretes one Python
+        task object per client it has ever seen."""
         if not 0 <= i < self.size:
             raise IndexError(f"client {i} out of range for pool of "
                              f"{self.size}")
-        if i not in self._tasks:
-            self._tasks[i] = self.task_dist.materialize_client(
-                i, seed=self.seed)
-        return self._tasks[i]
+        t = self._tasks.get(i)
+        if t is None:
+            t = self.task_dist.materialize_client(i, seed=self.seed)
+            self._tasks[i] = t
+            while len(self._tasks) > self.max_cached_tasks:
+                self._tasks.popitem(last=False)
+        else:
+            self._tasks.move_to_end(i)
+        return t
 
     def _client_rng(self, i: int) -> np.random.Generator:
+        # Reference-sampler identity. These generators hold irreplaceable
+        # mid-stream state, so the dict grows with the number of DISTINCT
+        # clients ever seated — the legacy O(N) liability the
+        # sampler="vectorized" counter derivation exists to remove.
         if i not in self._rngs:
             self._rngs[i] = np.random.default_rng(
                 [self.seed, _DATA_STREAM, i])
         return self._rngs[i]
 
     def host_state(self) -> Dict:
-        """JSON-able snapshot of the pool's mutable host state: the
-        per-client data rng streams that have advanced past their seed
-        (one bit-generator state per client that ever checked in).
+        """JSON-able snapshot of the pool's mutable host state, paired
+        with :meth:`load_host_state` for bit-for-bit checkpoint resume.
         Tasks and templates are NOT captured — they are pure functions
-        of ``(seed, i)`` and rematerialize on demand. Paired with
-        :meth:`load_host_state` for bit-for-bit checkpoint resume."""
+        of ``(seed, i)`` and rematerialize on demand.
+
+        - reference sampler: ``{"rngs": {client: bit-generator state}}``
+          — one entry per client that ever checked in.
+        - vectorized sampler: ``{"checkins": {client: count}}`` — just
+          the NONZERO check-in counters (the whole mutable state; the
+          streams re-derive from ``(seed, i, k)``). Compact even at
+          N=10^6."""
+        if self.sampler == "vectorized":
+            nz = np.flatnonzero(self._checkins)
+            return {"checkins": {str(int(i)): int(self._checkins[i])
+                                 for i in nz}}
         return {"rngs": {str(i): copy.deepcopy(g.bit_generator.state)
                          for i, g in self._rngs.items()}}
 
     def load_host_state(self, state: Dict) -> None:
-        """Restore a :meth:`host_state` snapshot: every captured client
-        rng resumes mid-stream; clients absent from the snapshot fall
-        back to their fresh seeded stream (they had never checked in)."""
+        """Restore a :meth:`host_state` snapshot: captured clients
+        resume mid-stream; clients absent from the snapshot fall back
+        to their fresh seeded stream (they had never checked in). The
+        snapshot format must match this pool's sampler — a legacy rng
+        snapshot cannot seed counters (or vice versa) and raises rather
+        than silently replaying data."""
+        state = state or {}
+        if self.sampler == "vectorized":
+            if state.get("rngs"):
+                raise ValueError(
+                    "checkpoint holds a legacy per-client rng snapshot "
+                    "('rngs'), but this pool uses sampler='vectorized' "
+                    "(counter-based streams); resume with "
+                    "ClientPool(..., sampler='reference') or restart "
+                    "the run")
+            self._checkins = np.zeros(self.size, np.int32)
+            for key, k in (state.get("checkins") or {}).items():
+                i = int(key)
+                if not 0 <= i < self.size:
+                    raise ValueError(f"checkpointed counter for client "
+                                     f"{i} out of range for pool of "
+                                     f"{self.size}")
+                self._checkins[i] = int(k)
+            return
+        if state.get("checkins"):
+            raise ValueError(
+                "checkpoint holds a check-in counter snapshot "
+                "('checkins'), but this pool uses sampler='reference' "
+                "(per-client rng streams); resume with "
+                "ClientPool(..., sampler='vectorized') or restart the "
+                "run")
         self._rngs = {}
-        for key, st in (state or {}).get("rngs", {}).items():
+        for key, st in state.get("rngs", {}).items():
             g = np.random.default_rng()
             g.bit_generator.state = st
             self._rngs[int(key)] = g
@@ -242,6 +360,10 @@ class ClientPool:
             rng = np.random.default_rng([self.seed, _PROBE_STREAM])
             x, y = self._draw(self.client_task(0), rng, support, data_mode)
             self._templates[key] = (np.zeros_like(x), np.zeros_like(y))
+            while len(self._templates) > _MAX_TEMPLATES:
+                self._templates.popitem(last=False)
+        else:
+            self._templates.move_to_end(key)
         return self._templates[key]
 
     @staticmethod
@@ -256,17 +378,31 @@ class ClientPool:
                             data_mode: str = "batch") -> Dict:
         """Support data for a planned block: for every participating
         (round, slot), draw ``support`` samples from THAT pool client's
-        stable task using ITS private rng stream. Scheduled-out slots
-        (and whole no-show rounds) stay zero. Called strictly in block
+        stable task using ITS private stream. Scheduled-out slots (and
+        whole no-show rounds) stay zero. Called strictly in block
         order, so a client's data stream advances once per check-in —
         deterministic regardless of prefetch depth or who else was
-        scheduled."""
+        scheduled. Dispatches on the pool's ``sampler``: "reference"
+        replays the legacy cached-generator path bit-for-bit,
+        "vectorized" derives both streams from the check-in counters
+        and draws each slot's support set in O(1) array calls."""
         cohort = np.asarray(cohort)
         part = np.asarray(participation, bool)
         rounds, clients = part.shape
         zx, zy = self._template(support, data_mode)
         x = np.zeros((rounds, clients) + zx.shape, zx.dtype)
         y = np.zeros((rounds, clients) + zy.shape, zy.dtype)
+        if self.sampler == "vectorized":
+            self._fill_block_counter(cohort, part, support, data_mode,
+                                     x, y)
+        else:
+            self._fill_block_reference(cohort, part, support, data_mode,
+                                       x, y)
+        return {"x": x, "y": y}
+
+    def _fill_block_reference(self, cohort, part, support, data_mode,
+                              x, y):
+        rounds, clients = part.shape
         for r in range(rounds):
             for c in range(clients):
                 if not part[r, c]:
@@ -275,11 +411,76 @@ class ClientPool:
                 x[r, c], y[r, c] = self._draw(
                     self.client_task(m), self._client_rng(m), support,
                     data_mode)
-        return {"x": x, "y": y}
+
+    def _fill_block_counter(self, cohort, part, support, data_mode,
+                            x, y):
+        # One pass over the PARTICIPATING slots only (np.nonzero, not a
+        # rounds x clients scan): each seats client m at its k-th
+        # check-in and draws from the (seed, m, k)-derived streams, then
+        # advances the counter. Cohorts are unique within a round, so
+        # slot order within a round cannot change any client's k.
+        counters = self._checkins
+        rs, cs = np.nonzero(part)
+        for r, c in zip(rs.tolist(), cs.tolist()):
+            m = int(cohort[r, c])
+            k = int(counters[m])
+            x[r, c], y[r, c] = self.task_dist.sample_client_support(
+                np.random.default_rng([self.seed, _TASK_STREAM, m]),
+                np.random.default_rng([self.seed, _DATA_STREAM, m, k]),
+                support, data_mode)
+            counters[m] = k + 1
+
+    def init_slabs(self, shards: int = 1) -> Dict[str, np.ndarray]:
+        """Allocate (or reuse) the host-resident per-client identity
+        slabs for ``residency="host"`` runs: one ``(n,)`` int32 array
+        per :class:`PoolState` identity field (n = pool size rounded up
+        to the shard multiple; padded rows are never seated). With
+        ``mmap_dir`` the slabs are file-backed ``np.memmap``\\ s, so the
+        O(N) identity state need not even occupy RAM."""
+        if self.residency != "host":
+            raise ValueError("init_slabs requires "
+                             "ClientPool(residency='host')")
+        shards = max(int(shards), 1)
+        n = -(-self.size // shards) * shards
+        if (self._slabs is not None
+                and len(self._slabs["last_seen"]) == n):
+            return self._slabs
+        fill = {"last_seen": -1, "staleness": 0, "checkins": 0}
+        slabs = {}
+        for name in self.SLAB_FIELDS:
+            if self.mmap_dir is not None:
+                os.makedirs(self.mmap_dir, exist_ok=True)
+                arr = np.memmap(
+                    os.path.join(self.mmap_dir, f"pool_{name}.i32"),
+                    dtype=np.int32, mode="w+", shape=(n,))
+            else:
+                arr = np.empty((n,), np.int32)
+            arr[:] = fill[name]
+            slabs[name] = arr
+        self._slabs = slabs
+        return slabs
+
+    def gather_rows(self, idx) -> Dict[str, np.ndarray]:
+        """Rows ``idx`` of the host identity slabs, as fresh (len(idx),)
+        int32 arrays (fancy indexing copies — safe to stage to device
+        while the slabs keep mutating)."""
+        if self._slabs is None:
+            raise ValueError("no host slabs: call init_slabs first")
+        return {name: np.asarray(slab[idx])
+                for name, slab in self._slabs.items()}
+
+    def scatter_rows(self, idx, rows: Dict[str, np.ndarray]) -> None:
+        """Write a block's updated identity rows back into the host
+        slabs (the device->host half of the gathered-slab round trip)."""
+        if self._slabs is None:
+            raise ValueError("no host slabs: call init_slabs first")
+        for name, slab in self._slabs.items():
+            slab[idx] = np.asarray(rows[name], np.int32)
 
     def init_state(self, phi, cohort_size: int,
                    buffered: Optional[BufferedAggregation] = None,
-                   shards: int = 1, template=None) -> PoolState:
+                   shards: int = 1, template=None,
+                   rows: Optional[int] = None) -> PoolState:
         """Fresh device-resident pool state. The FedBuff buffer's static
         capacity is ``buffer_size + cohort_size - 1``: a flush triggers
         at count >= buffer_size, and at most cohort_size arrivals land
@@ -300,12 +501,25 @@ class ClientPool:
         arrivals, since the flush predicate is on the psum-reduced
         GLOBAL count), with ``buf_count`` a (shards,) array of local
         fill levels. ``shards == 1`` is bit-for-bit the legacy layout
-        (scalar ``buf_count``, one contiguous buffer)."""
+        (scalar ``buf_count``, one contiguous buffer).
+
+        ``rows`` overrides the per-client axis length (the
+        ``residency="host"`` gathered-slab window: device state holds
+        only that many staged rows, remapped window-local by the
+        engine, while the full (N,) identity lives in the host slabs).
+        The FedBuff buffer is SERVER-side state and keeps its usual
+        capacity regardless of ``rows``."""
         if cohort_size % max(shards, 1):
             raise ValueError(f"cohort_size={cohort_size} must be a "
                              f"multiple of shards={shards} (the engine "
                              f"pads the cohort before building state)")
-        n = -(-self.size // shards) * shards        # ceil to shard multiple
+        if rows is None:
+            n = -(-self.size // shards) * shards    # ceil to shard multiple
+        else:
+            if rows % max(shards, 1):
+                raise ValueError(f"rows={rows} must be a multiple of "
+                                 f"shards={shards}")
+            n = int(rows)
         last_seen = jnp.full((n,), -1, jnp.int32)
         staleness = jnp.zeros((n,), jnp.int32)
         checkins = jnp.zeros((n,), jnp.int32)
@@ -381,15 +595,19 @@ class AvailabilityProcess(SamplingPolicy):
             self.availability(rng, start, end, pool_size), bool)
         blk = end - start
         assert avail.shape == (blk, pool_size)
-        cohort = np.zeros((blk, clients), np.int32)
-        part = np.zeros((blk, clients), bool)
-        for r in range(blk):
-            idx = np.flatnonzero(avail[r])
-            if len(idx) > clients:      # more volunteers than slots
-                idx = np.sort(rng.choice(idx, size=clients, replace=False))
-            m = len(idx)
-            cohort[r, :m] = idx
-            part[r, :m] = True
+        if self.sampler == "vectorized":
+            cohort, part = self._seat_available_block(rng, avail, clients)
+        else:
+            cohort = np.zeros((blk, clients), np.int32)
+            part = np.zeros((blk, clients), bool)
+            for r in range(blk):
+                idx = np.flatnonzero(avail[r])
+                if len(idx) > clients:  # more volunteers than slots
+                    idx = np.sort(
+                        rng.choice(idx, size=clients, replace=False))
+                m = len(idx)
+                cohort[r, :m] = idx
+                part[r, :m] = True
         m_per_round = part.sum(axis=1, keepdims=True)
         weights = np.where(
             m_per_round > 0, part / np.maximum(m_per_round, 1), 0.0)
@@ -399,6 +617,27 @@ class AvailabilityProcess(SamplingPolicy):
             "weights": weights.astype(np.float32),
             "cohort": cohort,
         }
+
+    @staticmethod
+    def _seat_available_block(rng, avail, clients):
+        """Loop-free cohort seating for the whole block: every available
+        client draws one uniform key, each round keeps the ``clients``
+        smallest keys (a uniform without-replacement thinning), and a
+        sort packs the winners ascending into the leading slots — the
+        reference layout (sorted cohort, False tail), on a NEW rng
+        stream contract (one (blk, N) key draw instead of per-round
+        ``choice`` calls)."""
+        blk, pool_size = avail.shape
+        k = min(clients, pool_size)
+        keys = np.where(avail, rng.uniform(size=avail.shape), np.inf)
+        cand = np.argpartition(keys, k - 1, axis=1)[:, :k]
+        alive = np.isfinite(np.take_along_axis(keys, cand, axis=1))
+        seats = np.sort(np.where(alive, cand, pool_size), axis=1)
+        cohort = np.zeros((blk, clients), np.int32)
+        part = np.zeros((blk, clients), bool)
+        part[:, :k] = seats < pool_size
+        cohort[:, :k] = np.where(part[:, :k], seats, 0)
+        return cohort, part
 
 
 @dataclasses.dataclass(frozen=True)
@@ -421,6 +660,19 @@ class DiurnalAvailability(AvailabilityProcess):
     def __post_init__(self):
         if self.period < 1:
             raise ValueError(f"period must be >= 1, got {self.period!r}")
+        # base/amplitude/phase_spread are probability-curve parameters:
+        # reject out-of-range values at construction (parse) time rather
+        # than silently clipping into a degenerate fleet.
+        if not 0.0 <= self.base <= 1.0:
+            raise ValueError(f"base must be in [0, 1] (a check-in "
+                             f"probability), got {self.base!r}")
+        if not 0.0 <= self.amplitude <= 1.0:
+            raise ValueError(f"amplitude must be in [0, 1], got "
+                             f"{self.amplitude!r}")
+        if not 0.0 <= self.phase_spread <= 1.0:
+            raise ValueError(f"phase_spread must be in [0, 1] (fraction "
+                             f"of the fleet's phase fan-out), got "
+                             f"{self.phase_spread!r}")
         self._validate_sampler()
 
     def availability(self, rng, start, end, pool_size):

@@ -137,6 +137,30 @@ class TaskDistribution:
                                                    support, data_mode,
                                                    participation)
 
+    def sample_client_support(self, rng_task: np.random.Generator,
+                              rng_data: np.random.Generator, support: int,
+                              data_mode: str = "batch"):
+        """One pooled check-in's support set from two COUNTER-DERIVED
+        streams (repro.core.pool.ClientPool's ``sampler="vectorized"``
+        path): ``rng_task`` is freshly seeded from ``(seed, 0x9E37, i)``
+        — the same derivation as ``materialize_client`` — and
+        ``rng_data`` from ``(seed, data-stream, i, k)`` where ``k`` is
+        the client's check-in count, so the draw is a pure function of
+        ``(seed, i, k)`` and the pool keeps NO per-client host objects.
+
+        Returns ``(x, y)`` arrays shaped ``(support, ...)``. The base
+        implementation materializes the task and replays the per-sample
+        reference order; overrides draw each per-sample quantity as ONE
+        array call (the block RNG order of ``sample_support_block``),
+        which for distributions whose per-sample draws are independent
+        (SineTasks) reproduces the base implementation bit-for-bit."""
+        task = self.sample_task(rng_task)
+        if data_mode == "stream":
+            sx, sy = zip(*task.support_stream(rng_data, support))
+            return np.stack(sx), np.stack(sy)
+        b = task.support_batch(rng_data, support)
+        return np.asarray(b["x"]), np.asarray(b["y"])
+
     @staticmethod
     def _mask_block(block: Dict, participation) -> Dict:
         """Zero the scheduled-out (round, client) slots of a sampled
@@ -184,6 +208,25 @@ class SineTasks(TaskDistribution):
 
         return ClientTask(make_sample=make_sample,
                           task_id=int(rng.integers(1 << 31)))
+
+    def sample_client_support(self, rng_task, rng_data, support,
+                              data_mode="batch"):
+        """Counter-derived pooled check-in, vectorized over the support
+        axis: (a, b, c) as one row-major uniform triple (the same three
+        doubles a scalar a/b/c loop draws), then all ``support`` inputs
+        as one draw — bit-for-bit the base per-sample replay, at O(1)
+        NumPy calls per check-in instead of O(support)."""
+        del data_mode  # the stream and batch views share one layout
+        # Python floats, not np.float64 scalars: make_sample's a/b/c are
+        # Python floats, which leave the float32 x un-promoted — an
+        # np.float64 scalar would push the sin into float64 and change
+        # the last bits.
+        a, b, c = map(float, rng_task.uniform([0.1, 0.8, 0.0],
+                                              [5.0, 1.2, np.pi]))
+        lo, hi = self.x_range
+        x = rng_data.uniform(lo, hi, size=(support, 1)).astype(np.float32)
+        y = (a * np.sin(b * x + c)).astype(np.float32)
+        return x, y
 
     def sample_support_block(self, rng, rounds, clients, support,
                              data_mode="batch", participation=None):
@@ -256,6 +299,32 @@ class OmniglotTasks(TaskDistribution):
 
         return ClientTask(make_sample=make_sample,
                           task_id=int(rng.integers(1 << 31)))
+
+    def sample_client_support(self, rng_task, rng_data, support,
+                              data_mode="batch"):
+        """Counter-derived pooled check-in, vectorized over the support
+        axis. ``rng_task`` draws the class subset with the SAME call as
+        ``sample_task`` (the stable classes of ``materialize_client``);
+        ``rng_data`` then draws labels, roll offsets, and noise each as
+        ONE array call — the documented block order, identically
+        distributed to (but differently interleaved than) the per-sample
+        reference replay."""
+        del data_mode
+        side = 28
+        classes = rng_task.choice(self.num_classes, size=self.ways,
+                                  replace=False)
+        labels = rng_data.integers(self.ways, size=support)
+        shifts = rng_data.integers(-2, 3, size=(support, 2))
+        noise = rng_data.normal(0, self.noise,
+                                size=(support, side, side)).astype(np.float32)
+        imgs = np.stack([self._proto(int(classes[l])) for l in labels])
+        r_idx = (np.arange(side)[None, :, None]
+                 - shifts[:, 0, None, None]) % side
+        c_idx = (np.arange(side)[None, None, :]
+                 - shifts[:, 1, None, None]) % side
+        rolled = imgs[np.arange(support)[:, None, None], r_idx, c_idx]
+        x = (rolled + noise)[..., None].astype(np.float32)
+        return x, labels.astype(np.int32)
 
     def sample_support_block(self, rng, rounds, clients, support,
                              data_mode="batch", participation=None):
@@ -337,6 +406,28 @@ class KWSTasks(TaskDistribution):
 
         return ClientTask(make_sample=make_sample,
                           task_id=int(rng.integers(1 << 31)))
+
+    def sample_client_support(self, rng_task, rng_data, support,
+                              data_mode="batch"):
+        """Counter-derived pooled check-in, vectorized over the support
+        axis: keyword subset via the same ``choice`` call as
+        ``sample_task``, then labels, time shifts, amplitudes, and noise
+        each as one array draw (block order; the time roll is a wrapped
+        gather along the frame axis)."""
+        del data_mode
+        t, f = 49, 10
+        words = rng_task.choice(self.num_words, size=self.ways,
+                                replace=False)
+        labels = rng_data.integers(self.ways, size=support)
+        shifts = rng_data.integers(-3, 4, size=support)
+        amps = rng_data.uniform(0.8, 1.2, size=support)
+        noise = rng_data.normal(0, self.noise,
+                                size=(support, t, f)).astype(np.float32)
+        maps = np.stack([self._proto(int(words[l])) for l in labels])
+        r_idx = (np.arange(t)[None, :] - shifts[:, None]) % t
+        rolled = maps[np.arange(support)[:, None], r_idx]
+        x = rolled * amps[:, None, None] + noise
+        return x[..., None].astype(np.float32), labels.astype(np.int32)
 
     def sample_support_block(self, rng, rounds, clients, support,
                              data_mode="batch", participation=None):

@@ -51,6 +51,7 @@ from repro.core.pool import (DiurnalAvailability, MarkovAvailability,
 from repro.data import LMClientStream
 from repro.models import build_model
 from repro.optim.schedules import linear_anneal
+from repro.runtime.sharding import init_distributed
 from repro.runtime.steps import (make_meta_train_step, microbatch,
                                  prefetch_batches)
 
@@ -105,6 +106,20 @@ def parse_args(argv=None):
                     help="size of the persistent client fleet (overrides "
                          "--clients; every client keeps its own data "
                          "stream across check-ins)")
+    ap.add_argument("--pool-sampler", default="reference",
+                    choices=("reference", "vectorized"),
+                    help="client-identity sampler for --pool-size: "
+                         "'reference' keeps one RNG per client on the "
+                         "host (bit-for-bit legacy stream); "
+                         "'vectorized' derives each check-in from a "
+                         "counter array — O(cohort) host work and an "
+                         "O(N) int32 footprint, the fleet-scale mode")
+    ap.add_argument("--pool-residency", default="device",
+                    choices=("device", "host"),
+                    help="where --pool-size per-client state lives: "
+                         "'device' keeps the full (N,) arrays resident; "
+                         "'host' keeps them in host slabs and stages "
+                         "only each round's cohort rows")
     ap.add_argument("--participation", type=fraction_arg, default=1.0,
                     help="fraction of the client fleet that checks in "
                          "each round (a PartialParticipation schedule "
@@ -135,6 +150,18 @@ def parse_args(argv=None):
                          "mode: inner SGD per pod, one cross-pod "
                          "all-reduce per round); 'none' (default) "
                          "stays single-device")
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator address host:port "
+                         "for multi-process runs; required with "
+                         "--num-processes > 1 (every process passes the "
+                         "SAME address) and meaningless without it")
+    ap.add_argument("--num-processes", type=positive_int_arg, default=1,
+                    help="total process count of a cross-host run; the "
+                         "client mesh (--devices) then spans every "
+                         "process's devices and each process stages its "
+                         "local shard only")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's rank in [0, --num-processes)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="snapshot directory: the LM launcher saves phi "
                          "every --ckpt-every rounds; engine strategies "
@@ -145,6 +172,22 @@ def parse_args(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.num_processes > 1 and not args.coordinator:
+        ap.error("--num-processes > 1 is a cross-host run; pass the "
+                 "shared --coordinator host:port")
+    if args.coordinator and args.num_processes == 1:
+        ap.error("--coordinator only applies with --num-processes > 1")
+    if not 0 <= args.process_id < args.num_processes:
+        ap.error(f"--process-id {args.process_id} out of range for "
+                 f"--num-processes {args.num_processes}")
+    if args.num_processes > 1 and args.strategy not in ENGINE_STRATEGIES:
+        ap.error("multi-process runs drive the round engine; pass an "
+                 f"engine --strategy ({'|'.join(ENGINE_STRATEGIES)})")
+    if args.num_processes > 1:
+        # must precede the first jax.devices() call below: after
+        # initialize, the device list spans every process in the run
+        init_distributed(args.coordinator, args.num_processes,
+                         args.process_id)
     if args.resume and not args.ckpt_dir:
         ap.error("--resume restores from --ckpt-dir; pass both")
     if args.availability != "iid" and args.participation < 1.0:
@@ -187,6 +230,10 @@ def parse_args(argv=None):
     if args.availability != "iid" and args.pool_size is None:
         ap.error("--availability needs a persistent fleet on the engine "
                  "path: pass --pool-size N")
+    if args.pool_size is None and (args.pool_sampler != "reference"
+                                   or args.pool_residency != "device"):
+        ap.error("--pool-sampler/--pool-residency configure the "
+                 "persistent fleet: pass --pool-size N")
     if args.pool_size is not None and args.pool_size < args.clients:
         ap.error(f"--pool-size {args.pool_size} cannot seat a cohort of "
                  f"--clients {args.clients} (identities are unique "
@@ -232,14 +279,18 @@ def run_engine_strategy(args):
                if args.strategy == "tifed" else CommChannel())
     dist = SineTasks()
     params = init_paper_model(SINE_MLP, jax.random.PRNGKey(args.seed))
-    pool = (ClientPool(dist, args.pool_size, seed=args.seed)
+    pool = (ClientPool(dist, args.pool_size, seed=args.seed,
+                       sampler=args.pool_sampler,
+                       residency=args.pool_residency)
             if args.pool_size else None)
     if args.availability == "diurnal":
-        sampling = DiurnalAvailability(period=24)
+        sampling = DiurnalAvailability(period=24,
+                                       sampler=args.pool_sampler)
     elif args.availability == "markov":
-        sampling = MarkovAvailability()
+        sampling = MarkovAvailability(sampler=args.pool_sampler)
     elif args.participation < 1.0:
-        sampling = PartialParticipation(args.participation)
+        sampling = PartialParticipation(args.participation,
+                                        sampler=args.pool_sampler)
     else:
         sampling = None
     buffered = (BufferedAggregation(args.buffer_size)

@@ -1,4 +1,8 @@
-"""Analytic device-memory model — simulates the MCU resource accounting of
+"""Memory metering: the analytic MCU model of paper Table II, plus a
+LIVE host+device meter (:class:`MemoryMeter`) used by the fleet-scale
+pool benchmarks to prove a run's residency is O(cohort), not O(N).
+
+Analytic device-memory model — simulates the MCU resource accounting of
 paper Table II (the hardware gate this container cannot measure directly).
 
 Accounting per algorithm, for a model with P parameter bytes, per-sample
@@ -86,3 +90,92 @@ def algorithm_memory_report(cfg: PaperModelConfig,
         "fits_arduino_256kb_reptile": reptile <= 256 * 1024,
         "fits_arduino_256kb_tinyreptile": tiny <= 256 * 1024,
     }
+
+
+def _statm_rss_bytes() -> int:
+    """Current resident set size from /proc/self/statm (Linux; 0 where
+    the proc filesystem is unavailable)."""
+    try:
+        with open("/proc/self/statm") as f:
+            pages = int(f.read().split()[1])
+        import os
+        return pages * os.sysconf("SC_PAGESIZE")
+    except (OSError, IndexError, ValueError):
+        return 0
+
+
+def _peak_rss_bytes() -> int:
+    """Process-lifetime peak RSS via getrusage (ru_maxrss is KiB on
+    Linux, bytes on macOS; 0 where the resource module is missing)."""
+    try:
+        import resource
+        import sys
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        return peak if sys.platform == "darwin" else peak * 1024
+    except (ImportError, ValueError):
+        return 0
+
+
+def _device_bytes() -> Dict[str, int]:
+    """Per-device live allocation from ``Device.memory_stats()`` — {}
+    on backends that don't report (CPU)."""
+    out: Dict[str, int] = {}
+    try:
+        import jax
+        for d in jax.devices():
+            stats = d.memory_stats()
+            if stats and "bytes_in_use" in stats:
+                out[str(d)] = int(stats["bytes_in_use"])
+    except Exception:
+        pass
+    return out
+
+
+@dataclass
+class MemoryMeter:
+    """Live host+device memory meter for residency proofs.
+
+    ``ru_maxrss`` is a process-LIFETIME high-water mark, so a meter
+    started mid-process cannot see a peak below the history it inherits;
+    the meter therefore reports both the baseline at construction and
+    the growth since. Usage::
+
+        meter = MemoryMeter()          # baseline snapshot
+        ... run the workload ...
+        rep = meter.report()
+        rep["host_current_growth_bytes"]   # RSS now vs baseline
+        rep["host_peak_growth_bytes"]      # lifetime peak vs baseline RSS
+        rep["device_peak_bytes"]           # max over sampled device use
+
+    ``sample()`` may be called any number of times mid-run to tighten
+    the device high-water mark (CPU backends report no device stats and
+    yield 0 there).
+    """
+    baseline_rss: int = 0
+    baseline_peak: int = 0
+    _device_peak: int = 0
+
+    def __post_init__(self):
+        self.baseline_rss = _statm_rss_bytes()
+        self.baseline_peak = _peak_rss_bytes()
+        self.sample()
+
+    def sample(self) -> None:
+        dev = _device_bytes()
+        if dev:
+            self._device_peak = max(self._device_peak,
+                                    max(dev.values()))
+
+    def report(self) -> Dict[str, int]:
+        self.sample()
+        current = _statm_rss_bytes()
+        peak = _peak_rss_bytes()
+        return {
+            "host_baseline_bytes": self.baseline_rss,
+            "host_current_bytes": current,
+            "host_current_growth_bytes": max(current - self.baseline_rss,
+                                             0),
+            "host_peak_bytes": peak,
+            "host_peak_growth_bytes": max(peak - self.baseline_rss, 0),
+            "device_peak_bytes": self._device_peak,
+        }

@@ -25,6 +25,40 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 FSDP_THRESHOLD_BYTES = 32 * 1024 * 1024
 
 
+def init_distributed(coordinator: str, num_processes: int,
+                     process_id: int) -> None:
+    """Join (or found) a multi-process JAX runtime, cross-host-collective
+    ready.
+
+    Must run BEFORE any other JAX call: on CPU backends the default
+    collective implementation cannot execute multi-process computations
+    at all ("Multiprocess computations aren't implemented on the CPU
+    backend"), so this selects the gloo transport FIRST — config flags
+    only take effect before backend initialization — and then calls
+    ``jax.distributed.initialize``. After it returns, ``jax.devices()``
+    spans every process (each host contributes its local devices, in
+    process order), so the engine's 1-D "clients" mesh — whose block
+    runner specs have been process-count agnostic since the mesh PR —
+    picks up cross-host shards with no further changes.
+
+    coordinator:   "host:port" of process 0's coordination service.
+    num_processes: total process count in the job.
+    process_id:    this process's rank in [0, num_processes).
+    """
+    if not 0 <= process_id < num_processes:
+        raise ValueError(f"process_id={process_id} out of range for "
+                         f"num_processes={num_processes}")
+    if num_processes > 1:
+        try:
+            jax.config.update("jax_cpu_collectives_implementation",
+                              "gloo")
+        except (AttributeError, ValueError):
+            pass        # older jaxlib: flag absent; TPU/GPU don't need it
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+
+
 def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes_names):
     """Version-portable shard_map: manual over `manual_axes_names`, GSPMD
     auto over every other mesh axis.
