@@ -52,6 +52,18 @@ forced-device subprocess itself when the parent is single-device).
 Floors: >= 2x rounds/sec at cohort 64 on 8 host devices vs 1 device,
 >= 1.5x at cohort 32 on 4, trace_count 1 for every sharded config.
 
+A "serving" section (PR 9) benchmarks the continuous-batching
+`serving.AdaptationServer` on the meta-learned sine-MLP init: sustained
+client-adaptation requests/sec plus p50/p95/p99 submit->retire latency
+for the fp32 online-SGD route and the int8 TIFeD route, each under a
+uniform-k and an adversarial ragged-k stream. Floors: >= 500 req/s at
+k=10 for fp32 on CPU smoke, exactly 1 jit trace per server config.
+
+Every section runs under a per-section wall-clock budget in --smoke
+mode (`_SectionBudget`): a section that overruns raises loudly with its
+elapsed time instead of silently eating the CI job's timeout, and each
+section's seconds land in the payload as ``section_seconds``.
+
 Writes BENCH_engine.json next to the repo root (same spirit as the
 results/dryrun JSON cells consumed by benchmarks/report.py) so the
 speedup is tracked across future PRs.
@@ -145,6 +157,34 @@ def _python_loop_reptile(params, dist, rounds, clients, epochs=8):
         phi = jax.tree.map(lambda p, d: p + alpha_t * d / clients,
                            phi, deltas)
     return jax.block_until_ready(jax.tree.leaves(phi)[0])
+
+
+class _SectionBudget:
+    """Per-section wall-clock guard for --smoke runs. ``check(name)``
+    closes the section that just ran, records its elapsed seconds, and
+    (when armed) raises RuntimeError past the budget — so a section
+    that regresses from seconds to minutes fails the CI smoke loudly
+    with a name and a number instead of burning the job's 45-minute
+    timeout. Full runs record seconds but never raise (the canonical
+    120-round numbers are allowed to be slow)."""
+
+    def __init__(self, enabled: bool, per_section_s: float = 300.0):
+        self.enabled = enabled
+        self.limit = per_section_s
+        self.seconds = {}
+        self._t0 = time.perf_counter()
+
+    def check(self, name: str) -> None:
+        now = time.perf_counter()
+        dt = now - self._t0
+        self._t0 = now
+        self.seconds[name] = round(dt, 2)
+        if self.enabled and dt > self.limit:
+            raise RuntimeError(
+                f"--smoke section {name!r} took {dt:.1f}s, over its "
+                f"{self.limit:.0f}s budget — smoke sections must stay "
+                f"CI-cheap; profile the regression or move the workload "
+                f"to the full bench")
 
 
 def _rounds_per_sec(fn, rounds, reps: int = 3, warm: bool = True):
@@ -262,12 +302,106 @@ def _mesh_scaling_subprocess(rounds: int, devices: int = 8):
                 "stderr": f"unparseable child stdout: {r.stdout[-2000:]!r}"}
 
 
+def serving_bench(smoke: bool = False):
+    """The serving section: sustained requests/sec + p50/p95/p99
+    latency for the continuous-batching AdaptationServer, fp32 and int8
+    routes, each under a uniform-k stream (every request asks the full
+    budget — the paper's k=10 deployment fine-tune) and an adversarial
+    ragged-k stream (k cycles pseudo-randomly over [1, k_max], the
+    regime continuous batching exists for). Acceptance floors (see
+    docs/SERVING.md): fp32 uniform k=10 >= 500 req/s on CPU smoke;
+    exactly 1 jit trace per server across warmup + the timed stream.
+
+    Returns (rows, section).
+    """
+    from repro.core.strategies import tifed_requantize
+    from repro.metering import MetricsTracker
+    from repro.serving import AdaptationServer, Fp32Adapter, TifedAdapter
+
+    SLOTS, SPT = 64, 5
+    phi32 = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
+    configs = [
+        ("fp32", Fp32Adapter(loss_fn=LOSS), phi32,
+         dict(support=10, query=20, k_max=10,
+              requests=512 if smoke else 4096)),
+        ("tifed", TifedAdapter(support=8, k_max=6),
+         tifed_requantize(phi32),
+         dict(support=8, query=20, k_max=6,
+              requests=256 if smoke else 2048)),
+    ]
+    section = {"slots": SLOTS, "steps_per_tick": SPT,
+               "model": SINE_MLP.name}
+    rows = []
+    for name, adapter, phi, cfg in configs:
+        rng = np.random.default_rng(0)
+
+        def make_reqs(n, k_fn, cfg=cfg, rng=rng):
+            reqs = []
+            for i in range(n):
+                a = rng.uniform(0.1, 5.0)
+                b = rng.uniform(0.0, np.pi)
+                sx = rng.uniform(-5, 5,
+                                 (cfg["support"], 1)).astype(np.float32)
+                qx = rng.uniform(-5, 5,
+                                 (cfg["query"], 1)).astype(np.float32)
+                reqs.append((sx, np.float32(a * np.sin(sx + b)), qx,
+                             np.float32(a * np.sin(qx + b)), k_fn(i)))
+            return reqs
+
+        strat_sec = {k: cfg[k] for k in ("support", "query", "k_max",
+                                         "requests")}
+        for wname, k_fn in (
+                ("uniform_k_max", lambda i, c=cfg: c["k_max"]),
+                ("ragged", lambda i, c=cfg: 1 + (i * 7919) % c["k_max"])):
+            server = AdaptationServer(phi, adapter, slots=SLOTS,
+                                      k_max=cfg["k_max"],
+                                      steps_per_tick=SPT)
+            reqs = make_reqs(cfg["requests"], k_fn)
+            for r in reqs[:SLOTS]:        # warm the (single) jit trace
+                server.submit(*r)
+            server.drain()
+            server.reset()
+            tracker = MetricsTracker()    # timed-stream latencies only
+            server.metrics = tracker
+            t0 = time.perf_counter()
+            for r in reqs:
+                server.submit(*r)
+            done = server.drain()
+            dt = time.perf_counter() - t0
+            rps = len(done) / dt
+            pct = tracker.percentiles("serve.latency_ms")
+            strat_sec[wname] = {
+                "req_per_s": round(rps, 1),
+                "p50_ms": round(pct["p50"], 3),
+                "p95_ms": round(pct["p95"], 3),
+                "p99_ms": round(pct["p99"], 3),
+                "ticks": server.ticks,
+                "trace_count": server.trace_count,
+            }
+            rows.append((f"engine/serving_{name}_{wname}", 1e6 / rps,
+                         f"req_per_s={rps:.1f} p99_ms={pct['p99']:.2f}"))
+            if server.trace_count != 1:
+                raise RuntimeError(
+                    f"serving {name}/{wname}: {server.trace_count} jit "
+                    f"traces across warmup + refills (contract: exactly "
+                    f"1 per (adapter, slots, shapes) config)")
+            if smoke and name == "fp32" and wname == "uniform_k_max" \
+                    and rps < 500:
+                raise RuntimeError(
+                    f"serving smoke floor: fp32 k=10 sustained only "
+                    f"{rps:.0f} req/s < 500 (slots={SLOTS}, "
+                    f"steps_per_tick={SPT})")
+        section[name] = strat_sec
+    return rows, section
+
+
 def bench(rounds: int = ROUNDS, smoke: bool = False):
     """Returns (rows, payload). ``smoke`` skips the slow legacy Python
     loops and only compares pipeline on vs off (tier-1 time budget)."""
     params = init_paper_model(SINE_MLP, jax.random.PRNGKey(0))
     dist = SineTasks()
     results = {}
+    budget = _SectionBudget(enabled=smoke)
 
     # engine kwargs: PR-1 synchronous baseline vs the pipelined fast path.
     # The pipelined config caps blocks so the run splits into >= 4 blocks
@@ -319,6 +453,7 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
         rows.append((f"engine/{name}_engine_pipelined", 1e6 / piped_rps,
                      f"rounds_per_sec={piped_rps:.1f} "
                      f"pipeline_speedup={pipeline_speedup:.2f}x"))
+    budget.check("pipeline")
 
     # -- int8 training: TIFeD integer DFA vs the fp32 reptile baseline --
     # Same cohort (8), model (SINE_MLP shapes), support, and epoch count
@@ -356,6 +491,7 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
                  f"rounds_per_sec={t_piped:.1f} "
                  f"vs_fp32_reptile={t_piped / fp32_rps:.2f}x "
                  f"bytes_vs_fp32={out['comm_bytes'] / fp32_bytes:.3f}"))
+    budget.check("int8_training")
 
     # -- heterogeneity: the ClientSchedule layer on the batched cohort --
     cohorts = [
@@ -396,6 +532,7 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
             het[name]["comm_bytes"]
             / het["full_participation"]["comm_bytes"], 3)
     results["heterogeneity"] = het
+    budget.check("heterogeneity")
 
     # -- pool / async: persistent identities over a 32-client pool ------
     # Floor: pooled uniform seating >= 0.9x the legacy anonymous-cohort
@@ -451,6 +588,7 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
             pool_sec[name]["rounds_per_sec"]
             / pool_sec["legacy_uniform"]["rounds_per_sec"], 2)
     results["pool_async"] = pool_sec
+    budget.check("pool_async")
 
     # -- pool_scale: the fleet-size sweep (PR 8) ------------------------
     # Fixed cohort (256), fleet size N in {256, 1e4, 1e6}: with the
@@ -498,6 +636,7 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
     scale_sec["n256_over_n1000000"] = round(
         scale_rps[256] / scale_rps[1_000_000], 3)
     results["pool_scale"] = scale_sec
+    budget.check("pool_scale")
 
     # -- checkpoint overhead: async round-state snapshots (PR 7) --------
     # The preemption-safety tentpole must be ~free on the round engine's
@@ -551,6 +690,7 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
     rows.append(("engine/ckpt_every_10_pipelined", 1e6 / ck_rps,
                  f"rounds_per_sec={ck_rps:.1f} "
                  f"overhead_pct={overhead_pct:.2f}"))
+    budget.check("ckpt_overhead")
 
     # -- mesh scaling: shard the client axis over (forced) host devices --
     # Multi-device parents (the multi-device CI job, a real accelerator
@@ -562,10 +702,17 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
         rows.extend(mesh_rows)
     elif not smoke:
         results["mesh_scaling"] = _mesh_scaling_subprocess(rounds)
+    budget.check("mesh_scaling")
+
+    # -- serving: the continuous-batching adaptation server (PR 9) ------
+    serve_rows, results["serving"] = serving_bench(smoke)
+    rows.extend(serve_rows)
+    budget.check("serving")
 
     payload = {"bench": "engine", "status": "OK", "backend":
                jax.default_backend(), "rounds": rounds, "support": SUPPORT,
-               "smoke": smoke, "results": results}
+               "smoke": smoke, "section_seconds": budget.seconds,
+               "results": results}
     return rows, payload
 
 
@@ -592,10 +739,18 @@ def main():
                     help="run ONLY the mesh_scaling sweep and print its "
                          "section as JSON (the multi-device subprocess "
                          "bench() spawns; needs forced host devices)")
+    ap.add_argument("--serving-only", action="store_true",
+                    help="run ONLY the serving section and print it as "
+                         "JSON (the serving CI job's fast path; --smoke "
+                         "arms the >= 500 req/s fp32 floor)")
     args = ap.parse_args()
 
     if args.mesh_only:
         _, section = mesh_scaling(rounds=args.rounds)
+        print(json.dumps(section, indent=2))
+        return
+    if args.serving_only:
+        _, section = serving_bench(smoke=args.smoke)
         print(json.dumps(section, indent=2))
         return
 

@@ -364,6 +364,27 @@ def restore_round_state(directory: str, *, phi, pool_state=None,
         fingerprint=dict(extra.get("fingerprint", {})))
 
 
+def load_params(directory_or_file: str, template, *,
+                cast: bool = False):
+    """Load JUST the phi/params tree for serving — the
+    `serving.AdaptationServer` side of a training checkpoint.
+
+    Accepts either a ``run_federated(ckpt_dir=...)`` round-state
+    directory/file (the phi sub-tree is extracted, pool state and bills
+    ignored) or a plain ``save_checkpoint`` snapshot whose tree IS the
+    params. ``template`` fixes structure/shapes/dtypes as in
+    :func:`restore_checkpoint`. Returns the params pytree (host numpy
+    leaves; pass straight to ``AdaptationServer``)."""
+    try:
+        tree, _, _ = restore_checkpoint(directory_or_file,
+                                        {"phi": template}, cast=cast)
+        return tree["phi"]
+    except KeyError:
+        tree, _, _ = restore_checkpoint(directory_or_file, template,
+                                        cast=cast)
+        return tree
+
+
 class AsyncCheckpointWriter:
     """Background-thread snapshot writer: ``submit`` enqueues a
     (device-resident) pytree and returns immediately; the writer thread

@@ -1063,7 +1063,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   buffered: Optional[BufferedAggregation] = None,
                   mesh=None, ckpt_dir: Optional[str] = None,
                   ckpt_every: int = 10, ckpt_keep: int = 3,
-                  ckpt_async: bool = True, resume: bool = False) -> Dict:
+                  ckpt_async: bool = True, resume: bool = False,
+                  tracker=None) -> Dict:
     """Run `rounds` federated rounds of `strategy`.
 
     Returns {"params", "history"} (+ "comm_bytes" and "per_client_bytes"
@@ -1133,6 +1134,15 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     the original run and the resume (training continues past the old
     horizon); seed/cohort/pool/mesh-shard mismatches are rejected via a
     config fingerprint.
+
+    `tracker` attaches a `repro.metering.MetricsTracker`: per-round
+    inner losses, cumulative transport bytes, eval rows, runner-cache /
+    wall-clock gauges, and (pooled runs) the end-of-run staleness
+    distribution flow into it, and a tracker with `profile_dir=` set
+    brackets the scan loop in the JAX profiler. The tracker is
+    host-side observation only — attaching one is bit-for-bit inert
+    (the per-block loss fetch happens ONLY when a tracker is present,
+    and feeds nothing back).
     """
     if channel is None:
         channel = CommChannel()
@@ -1472,6 +1482,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                                  tuple(id_sharding for _ in rows)))
 
     staged_iter = prefetch_items(stage, len(blocks), depth=prefetch)
+    if tracker is not None:
+        tracker.on_run_start()
     try:
         for (start, end), (part, cohort, uniq, staged) in zip(blocks,
                                                               staged_iter):
@@ -1495,6 +1507,11 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                     uniq, {f: np.asarray(g)[:uniq.size] for f, g in
                            zip(ClientPool.SLAB_FIELDS, got)})
             blk = end - start
+            if tracker is not None:
+                # the loss fetch syncs on the block — done ONLY when a
+                # tracker asks for it, so tracker=None stays fetch-free
+                tracker.on_block(start, end,
+                                 np.asarray(round_losses)[:blk])
             if strategy.meters_comm:
                 # bill downlink + uplink per participating client, at the
                 # round's exact (possibly rotating) payload
@@ -1507,7 +1524,10 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                     np.add.at(per_client_bytes, cohort[part], bills[part])
                 else:
                     per_client_bytes += (2 * payloads[:, None] * part).sum(0)
-                comm_bytes += int((2 * payloads * part.sum(axis=1)).sum())
+                block_bytes = int((2 * payloads * part.sum(axis=1)).sum())
+                comm_bytes += block_bytes
+                if tracker is not None:
+                    tracker.on_transport(end, block_bytes, comm_bytes)
             if eval_every and end % eval_every == 0:
                 # cross-host: run the eval protocol on a LOCAL numpy
                 # copy of the replicated phi, so it stays a per-process
@@ -1524,6 +1544,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                 if strategy.tracks_inner_loss:
                     ev["inner_loss"] = float(round_losses[blk - 1])
                 history.append(ev)
+                if tracker is not None:
+                    tracker.on_eval(ev)
             if ckpt_at(end):
                 # block-boundary COPIES: the live carry is donated to
                 # the next block, so the snapshot dispatches a device
@@ -1569,6 +1591,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         staged_iter.close()
         if writer is not None:
             writer.close(raise_errors=False)
+        if tracker is not None:
+            tracker.stop_profile()   # idempotent; covers error exits
 
     out = {"params": phi, "history": history}
     if strategy.meters_comm:
@@ -1592,4 +1616,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             # scalar off-mesh; per-shard fill levels (shards,) on mesh
             out["pool_state"]["buffered_pending"] = int(
                 np.asarray(ps.buf_count).sum())
+    if tracker is not None:
+        tracker.on_run_end(
+            runner_cache_stats(),
+            staleness=(out["pool_state"]["staleness"] if pooled else None))
     return out

@@ -64,6 +64,12 @@ def tree_meta_update(phi, phi_hat, alpha):
                         phi, phi_hat)
 
 
+def tree_online_sgd(params, grads, lr):
+    """Fused SGD step over a whole parameter pytree — the serving hot
+    path's Pallas route (`serving.Fp32Adapter(use_pallas=True)`)."""
+    return jax.tree.map(lambda p, g: online_sgd(p, g, lr), params, grads)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "block_s"))
 def flash_decode(q, k_cache, v_cache, cache_len, *, window=0,
                  block_s=_fd.DEFAULT_BLOCK_S):

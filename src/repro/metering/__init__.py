@@ -1,1 +1,2 @@
 from repro.metering.memory import algorithm_memory_report  # noqa: F401
+from repro.metering.tracker import MetricsTracker  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.serving.adapters import Fp32Adapter, TifedAdapter  # noqa: F401
+from repro.serving.server import (AdaptationServer, AdaptResult,  # noqa: F401
+                                  offline_adapt)

@@ -1,0 +1,139 @@
+"""Hypothesis property tests for the AdaptationServer's
+continuous-batching queue (skip when hypothesis is absent, mirroring
+tests/test_properties.py).
+
+Invariants:
+
+- CONSERVATION: every submitted request retires exactly once, having
+  run exactly its k adaptation steps — across arbitrary slot counts,
+  tick widths, and ragged k streams.
+- NO STARVATION: the drain terminates within the analytic worst-case
+  tick bound for ANY adversarial k distribution, and with one slot the
+  FIFO admission order is the retirement order (nobody is overtaken
+  while waiting).
+- NO MASK LEAKAGE: a request's result does not depend on which
+  companions share the batch (padded/retired slots never bleed into
+  live ones).
+
+The servers are cached per (slots, steps_per_tick) config and reset
+between examples — which doubles as a re-assertion of the single-trace
+contract under hundreds of adversarial streams.
+"""
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.models.paper_nets import relu_mlp_loss
+from repro.serving import AdaptationServer, Fp32Adapter
+
+SET = dict(deadline=None, max_examples=15, derandomize=True)
+K_MAX, SUPPORT, QUERY = 6, 6, 4
+
+# tiny 1-4-4-1 relu MLP: the queue invariants are model-independent,
+# so the device work per example stays microscopic
+_r = np.random.default_rng(0)
+PHI = {"w0": np.float32(_r.normal(size=(1, 4)) * 0.5),
+       "b0": np.zeros(4, np.float32),
+       "w1": np.float32(_r.normal(size=(4, 4)) * 0.5),
+       "b1": np.zeros(4, np.float32),
+       "w2": np.float32(_r.normal(size=(4, 1)) * 0.5),
+       "b2": np.zeros(1, np.float32)}
+ADAPTER = Fp32Adapter(loss_fn=relu_mlp_loss, lr=0.01, use_pallas=False)
+
+_SERVERS = {}
+
+
+def server_for(slots, spt):
+    """One cached server per config: hypothesis examples reuse the jit
+    trace (and keep re-checking it stays at 1)."""
+    key = (slots, spt)
+    if key not in _SERVERS:
+        _SERVERS[key] = AdaptationServer(
+            jax.tree.map(np.asarray, PHI), ADAPTER, slots=slots,
+            k_max=K_MAX, steps_per_tick=spt)
+    srv = _SERVERS[key]
+    srv.reset()
+    return srv
+
+
+def submit_stream(server, ks, seed=0):
+    rng = np.random.default_rng(seed)
+    rids = []
+    for k in ks:
+        sx = rng.uniform(-1, 1, (SUPPORT, 1)).astype(np.float32)
+        sy = rng.uniform(-1, 1, (SUPPORT, 1)).astype(np.float32)
+        qx = rng.uniform(-1, 1, (QUERY, 1)).astype(np.float32)
+        qy = rng.uniform(-1, 1, (QUERY, 1)).astype(np.float32)
+        rids.append(server.submit(sx, sy, qx, qy, k))
+    return rids
+
+
+ks_strategy = st.lists(st.integers(1, K_MAX), min_size=1, max_size=24)
+
+
+@given(ks=ks_strategy, slots=st.integers(1, 4), spt=st.integers(1, 4))
+@settings(**SET)
+def test_request_conservation(ks, slots, spt):
+    """Every admitted request retires exactly once, with exactly its
+    requested number of adaptation steps."""
+    server = server_for(slots, spt)
+    rids = submit_stream(server, ks)
+    results = server.drain()
+    assert server.idle
+    got = sorted(r.rid for r in results)
+    assert got == sorted(rids)                      # exactly-once
+    by_rid = {r.rid: r for r in results}
+    for rid, k in zip(rids, ks):
+        assert by_rid[rid].steps == k               # exactly k steps
+    assert server.trace_count == 1
+
+
+@given(ks=ks_strategy, slots=st.integers(1, 4), spt=st.integers(1, 4))
+@settings(**SET)
+def test_no_starvation_tick_bound(ks, slots, spt):
+    """Adversarial ragged k cannot stall the queue: the drain finishes
+    within the serial worst-case bound (every request admitted, run,
+    and retired strictly one after another), and usually far under it.
+    """
+    server = server_for(slots, spt)
+    submit_stream(server, ks)
+    server.drain()
+    bound = sum(math.ceil(k / spt) for k in ks) + len(ks) + 1
+    assert server.ticks <= bound, (server.ticks, bound)
+
+
+@given(ks=ks_strategy)
+@settings(**SET)
+def test_fifo_order_single_slot(ks):
+    """With one slot the server is a pure FIFO: retirement order ==
+    submission order (no request ever overtakes an earlier one)."""
+    server = server_for(1, 2)
+    rids = submit_stream(server, ks)
+    results = server.drain()
+    assert [r.rid for r in results] == rids
+
+
+@given(ks=st.lists(st.integers(1, K_MAX), min_size=2, max_size=12),
+       probe_k=st.integers(1, K_MAX))
+@settings(**SET)
+def test_no_cross_slot_leakage(ks, probe_k):
+    """The probe request's query loss is companion-independent: served
+    alone vs inside an adversarial ragged batch agree to fp32 vmap
+    tolerance (the int8 route's exact-equality version lives in
+    tests/test_serving.py)."""
+    server = server_for(3, 2)
+    rids = submit_stream(server, [probe_k] + ks, seed=7)
+    together = {r.rid: r for r in server.drain()}[rids[0]]
+    server.reset()
+    submit_stream(server, [probe_k], seed=7)        # same rng -> same probe
+    alone = server.drain()[0]
+    np.testing.assert_allclose(together.query_loss, alone.query_loss,
+                               rtol=1e-5, atol=1e-6)
+    assert together.steps == alone.steps == probe_k
