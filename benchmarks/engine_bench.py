@@ -52,6 +52,16 @@ forced-device subprocess itself when the parent is single-device).
 Floors: >= 2x rounds/sec at cohort 64 on 8 host devices vs 1 device,
 >= 1.5x at cohort 32 on 4, trace_count 1 for every sharded config.
 
+An "lm_mesh" section (PR 10) benchmarks federated meta-learning over a
+LARGE client model: the reduced transformer on heterogeneous LM-domain
+clients (cohort 8), 1-D client mesh (phi replicated) vs the 2-D
+(clients x model) mesh (phi's weight matrices split over the model
+axis per its ModelPartitioner, GSPMD-scheduled collectives) —
+rounds/sec plus the analytic per-device parameter bytes of each
+layout. Floor: 2-D phi bytes <= 0.6x the replicated 1-D layout
+(armed under --smoke; the mesh2d CI job runs --lm-mesh-only --smoke
+on 4 forced host devices).
+
 A "serving" section (PR 9) benchmarks the continuous-batching
 `serving.AdaptationServer` on the meta-learned sine-MLP init: sustained
 client-adaptation requests/sec plus p50/p95/p99 submit->retire latency
@@ -296,6 +306,113 @@ def _mesh_scaling_subprocess(rounds: int, devices: int = 8):
         # tolerate stray non-JSON stdout from the child's imports: the
         # section object is the last thing printed, starting at its
         # opening brace
+        return json.loads(r.stdout[r.stdout.index("{"):])
+    except (ValueError, json.JSONDecodeError):
+        return {"status": "FAILED",
+                "stderr": f"unparseable child stdout: {r.stdout[-2000:]!r}"}
+
+
+def lm_mesh_bench(rounds: int = ROUNDS, smoke: bool = False):
+    """The lm_mesh section (PR 10): federated meta-learning over a
+    LARGE client model — a reduced transformer whose clients are
+    heterogeneous LM domains (LmTaskDistribution) — comparing the 1-D
+    client mesh (phi fully replicated on every device) against the 2-D
+    (clients, model) mesh (phi's weight matrices split over the model
+    axis per the transformer ModelPartitioner, GSPMD route). Records
+    rounds/sec for both layouts, the live host-memory meter, and the
+    ANALYTIC per-device parameter bytes of each placed phi
+    (leaf.sharding.shard_shape — device memory meters read 0 on forced
+    host devices). Acceptance floor (docs/BENCHMARKS.md): 2-D
+    per-device parameter bytes <= 0.6x the replicated 1-D layout —
+    enforced here under --smoke (the mesh2d CI job's contract).
+
+    Needs >= 4 devices for the 2x2 mesh; on CPU run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=4.
+
+    Returns (rows, section).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.configs import get_arch
+    from repro.core import run_federated
+    from repro.data import LmTaskDistribution, lm_loss
+    from repro.metering.memory import MemoryMeter
+    from repro.runtime.sharding import (DEFAULT_PARTITIONER,
+                                        client_model_mesh,
+                                        per_device_param_bytes)
+
+    ndev = len(jax.devices())
+    if ndev < 4:
+        raise RuntimeError(
+            "lm_mesh needs >= 4 devices (a 2x2 clients x model mesh); "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    from repro.models import build_model
+    cfg = dataclasses.replace(
+        get_arch("tinyllama-1.1b").reduced(), name="tinyllama-bench",
+        vocab_size=256, d_model=128, d_ff=256, num_heads=4,
+        num_kv_heads=4, head_dim=32)
+    model = build_model(cfg)
+    lm_dist = LmTaskDistribution(cfg.vocab_size, 32)
+    phi = model.init(jax.random.PRNGKey(0))
+    strategy = ReptileStrategy(lm_loss(model), epochs=2, use_pallas=None)
+    lm_rounds = 6 if smoke else min(rounds, 24)
+    param_count = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(phi))
+    section = {"model": cfg.name, "param_count": param_count,
+               "cohort": 8, "seq": 32, "rounds": lm_rounds}
+    cases = (("1d_clients4", client_mesh(4)),
+             ("2d_clients2_model2", client_model_mesh(2, 2)))
+    rows, phi_bytes = [], {}
+    for name, mesh in cases:
+        model_sharded = "model" in mesh.axis_names
+        meter = MemoryMeter()
+
+        def run(mesh=mesh):
+            out = run_federated(
+                phi, lm_dist, strategy, rounds=lm_rounds,
+                clients_per_round=8, alpha=1.0, beta=0.02, support=4,
+                seed=0, mesh=mesh, prefetch=2,
+                max_block=max(1, lm_rounds // 2))
+            jax.block_until_ready(jax.tree.leaves(out["params"])[0])
+        rps = _rounds_per_sec(run, lm_rounds, reps=2 if smoke else 3)
+        mem = meter.report()
+        placed = jax.device_put(
+            phi, DEFAULT_PARTITIONER.shardings(phi, mesh) if model_sharded
+            else NamedSharding(mesh, PartitionSpec()))
+        phi_bytes[name] = per_device_param_bytes(placed)
+        section[name] = {
+            "rounds_per_sec": round(rps, 2),
+            "per_device_param_bytes": phi_bytes[name],
+            "host_peak_growth_mb": round(
+                mem["host_peak_growth_bytes"] / 2 ** 20, 1),
+        }
+        rows.append((f"engine/lm_mesh_{name}", 1e6 / rps,
+                     f"rounds_per_sec={rps:.2f} "
+                     f"per_device_param_bytes={phi_bytes[name]}"))
+    ratio = phi_bytes["2d_clients2_model2"] / phi_bytes["1d_clients4"]
+    section["param_bytes_2d_over_1d"] = round(ratio, 3)
+    if smoke and ratio > 0.6:
+        raise RuntimeError(
+            f"lm_mesh floor violated: 2-D per-device parameter bytes "
+            f"must be <= 0.6x the replicated 1-D layout, got "
+            f"{ratio:.3f} ({phi_bytes})")
+    return rows, section
+
+
+def _lm_mesh_subprocess(rounds: int, devices: int = 4):
+    """Run ``lm_mesh_bench`` in a child with forced host devices (the
+    _mesh_scaling_subprocess pattern); returns the section dict."""
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        flags + [f"--xla_force_host_platform_device_count={devices}"])
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.engine_bench",
+         "--lm-mesh-only", "--rounds", str(rounds)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if r.returncode != 0:
+        return {"status": "FAILED", "stderr": r.stderr[-2000:]}
+    try:
         return json.loads(r.stdout[r.stdout.index("{"):])
     except (ValueError, json.JSONDecodeError):
         return {"status": "FAILED",
@@ -704,6 +821,18 @@ def bench(rounds: int = ROUNDS, smoke: bool = False):
         results["mesh_scaling"] = _mesh_scaling_subprocess(rounds)
     budget.check("mesh_scaling")
 
+    # -- lm_mesh: the 2-D (clients x model) mesh on a transformer (PR 10) --
+    # >= 4 devices sweep in-process (the mesh2d CI job forces 4 on CPU);
+    # a single-device full run spawns the forced-device subprocess; a
+    # single-device smoke skips (tier-1 time budget — the mesh2d job
+    # runs --lm-mesh-only --smoke, which arms the 0.6x bytes floor).
+    if len(jax.devices()) >= 4:
+        lm_rows, results["lm_mesh"] = lm_mesh_bench(rounds, smoke)
+        rows.extend(lm_rows)
+    elif not smoke:
+        results["lm_mesh"] = _lm_mesh_subprocess(rounds)
+    budget.check("lm_mesh")
+
     # -- serving: the continuous-batching adaptation server (PR 9) ------
     serve_rows, results["serving"] = serving_bench(smoke)
     rows.extend(serve_rows)
@@ -743,10 +872,20 @@ def main():
                     help="run ONLY the serving section and print it as "
                          "JSON (the serving CI job's fast path; --smoke "
                          "arms the >= 500 req/s fp32 floor)")
+    ap.add_argument("--lm-mesh-only", action="store_true",
+                    help="run ONLY the lm_mesh section (2-D clients x "
+                         "model mesh on the reduced transformer) and "
+                         "print it as JSON; needs >= 4 devices — the "
+                         "mesh2d CI job's fast path, where --smoke arms "
+                         "the 0.6x per-device parameter bytes floor")
     args = ap.parse_args()
 
     if args.mesh_only:
         _, section = mesh_scaling(rounds=args.rounds)
+        print(json.dumps(section, indent=2))
+        return
+    if args.lm_mesh_only:
+        _, section = lm_mesh_bench(rounds=args.rounds, smoke=args.smoke)
         print(json.dumps(section, indent=2))
         return
     if args.serving_only:

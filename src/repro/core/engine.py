@@ -139,23 +139,37 @@ def client_mesh(devices=None) -> Mesh:
     return Mesh(np.array(devs), (CLIENT_AXIS,))
 
 
+#: the optional second mesh axis: a 2-D (clients, model) mesh
+#: additionally shards phi's weight matrices per the run's
+#: ModelPartitioner (see repro.runtime.sharding.client_model_mesh).
+MODEL_AXIS = "model"
+
+
 def _resolve_mesh(mesh) -> Optional[Mesh]:
     """Normalize run_federated's mesh argument: None passes through,
     "auto" builds a mesh over every device, an int over the first n,
-    and an explicit Mesh must be 1-D over the "clients" axis."""
+    and an explicit Mesh must be 1-D over the "clients" axis or 2-D
+    over ("clients", "model")."""
     if mesh is None:
         return None
     if mesh == "auto":
         return client_mesh()
     if isinstance(mesh, int):
         return client_mesh(mesh)
-    if tuple(mesh.axis_names) != (CLIENT_AXIS,):
+    if tuple(mesh.axis_names) not in ((CLIENT_AXIS,),
+                                      (CLIENT_AXIS, MODEL_AXIS)):
         raise ValueError(
-            f"run_federated shards the cohort over a 1-D '{CLIENT_AXIS}' "
-            f"mesh axis; got axes {tuple(mesh.axis_names)} (build one "
-            f"with repro.core.engine.client_mesh, or pass an int / "
+            f"run_federated shards the cohort over a '{CLIENT_AXIS}' "
+            f"mesh axis — 1-D ('{CLIENT_AXIS}',) or 2-D ('{CLIENT_AXIS}', "
+            f"'{MODEL_AXIS}'); got axes {tuple(mesh.axis_names)} (build "
+            f"one with repro.core.engine.client_mesh / "
+            f"repro.runtime.sharding.client_model_mesh, or pass an int / "
             f"'auto')")
     return mesh
+
+
+def _model_sharded(mesh) -> bool:
+    return mesh is not None and MODEL_AXIS in mesh.axis_names
 
 
 def meta_interpolate(phi, phi_hat, alpha, *, use_pallas: Optional[bool] = None):
@@ -504,6 +518,25 @@ class _BlockRunner:
     always runs the scheduled body (uniform schedules are just uniform
     weights there, with the per-step masking skipped — see ``masked``).
 
+    2-D runs (``mesh`` is a ("clients", "model") Mesh from
+    ``client_model_mesh``) take the GSPMD route instead: the GLOBAL
+    block bodies (``axis is None`` — the same code a flat run traces)
+    compile under plain ``jax.jit`` against the mesh, with all sharding
+    flowing from the COMMITTED input layouts — phi carries the run's
+    ``ModelPartitioner`` NamedShardings (weight matrices split on the
+    model axis, norms/biases replicated; ``pin_phi`` re-asserts them at
+    block entry/exit so the donated carry keeps one layout and the
+    runner keeps one trace), and the schedule/batch rows arrive sharded
+    over "clients". The partitioner vmaps the client phase over the
+    clients axis and emits the cross-client reduction plus any in-loop
+    model-axis collectives itself, compiler-scheduled. No manual
+    ``shard_map`` is involved: partial-manual lowering (manual over
+    "clients", auto over "model") hits an XLA sharding-propagation
+    CHECK on this toolchain for scan-with-outputs under vmap inside
+    lax.cond — a shape user-pluggable strategy hooks are free to
+    produce — so the manual route is 1-D only. Pool state stages in
+    the flat (``shards == 1``) layout.
+
     ``trace_count`` increments once per jit trace; with the engine's
     fixed per-run block shape it stays at 1 per (strategy, beta,
     channel, schedule-shape, pool-shape, masked, mesh) config — the
@@ -514,9 +547,14 @@ class _BlockRunner:
                  scheduled: bool = False, pooled: bool = False,
                  buffered: Optional[BufferedAggregation] = None,
                  mesh: Optional[Mesh] = None,
-                 masked: Optional[bool] = None):
+                 masked: Optional[bool] = None, partitioner=None):
         self.trace_count = 0
-        axis = CLIENT_AXIS if mesh is not None else None
+        # 2-D (clients, model) meshes take the GSPMD route: axis=None
+        # selects the global block bodies (no manual shard_map, no named
+        # collectives) and the mesh partitions them from the committed
+        # input shardings — see the model_sharded comment below.
+        axis = (CLIENT_AXIS if mesh is not None
+                and MODEL_AXIS not in mesh.axis_names else None)
         if mesh is not None:
             if not scheduled:
                 raise ValueError("mesh runs always use the scheduled "
@@ -843,14 +881,63 @@ class _BlockRunner:
                 weights=P(None, axis),
                 cohort=P(None, axis) if pooled else None)
 
+        # 2-D (clients, model) meshes run the GLOBAL (unsharded) block
+        # body under plain jit — NO shard_map. All sharding flows from
+        # the committed input layouts (phi carries the ModelPartitioner's
+        # per-leaf NamedShardings, batch/schedule rows are split over the
+        # clients axis), so GSPMD partitions the vmapped client phase
+        # over "clients" and every model-axis collective the sharded
+        # matmuls imply is compiler-scheduled. The weighted client mean
+        # then reduces the clients-sharded results axis — one all-reduce
+        # with phi's model shards aggregated IN PLACE (no gather of full
+        # phi to any device). The per-round partial-manual shard_map form
+        # (manual over "clients", auto over "model") is what
+        # shard_map_compat was built for, but XLA's partitioner in this
+        # toolchain hard-aborts (CHECK sharding.IsManualSubgroup) on
+        # scan-emitting-outputs under vmap inside a manual subgroup —
+        # strategy hooks are user-pluggable, so that pattern cannot be
+        # outlawed. Pure GSPMD keeps both invariants (zero per-round
+        # host dispatches, one jit trace) without restricting hooks.
+        # ``pin_phi`` pins phi's layout at block entry/exit: GSPMD is
+        # otherwise free to pick a different output layout, which would
+        # re-commit the donated phi and retrace the next block.
+        model_sharded = mesh is not None and MODEL_AXIS in mesh.axis_names
+        if model_sharded:
+            if partitioner is None:     # direct construction in tests
+                from repro.runtime.sharding import DEFAULT_PARTITIONER
+                partitioner = DEFAULT_PARTITIONER
+
+            def pin_phi(phi):
+                return jax.tree_util.tree_map_with_path(
+                    lambda path, leaf: jax.lax.with_sharding_constraint(
+                        leaf, NamedSharding(mesh, partitioner.spec(
+                            path, leaf.shape, mesh))), phi)
+        else:
+            def pin_phi(phi):
+                return phi
+
         if pooled:
-            if mesh is None:
+            if axis is not None:
+                # buf_count dummy must be RANK 1: this route carries the
+                # mesh layout's (shards,) local fill levels, and
+                # pool_state_specs replicates rank-0 fill counters (the
+                # flat layout the 2-D GSPMD route runs in)
+                state_spec = pool_state_specs(
+                    PoolState(0, 0, 0,
+                              buf_updates=(0 if buffered else None),
+                              buf_round=(0 if buffered else None),
+                              buf_count=(np.zeros(1, np.int32)
+                                         if buffered else None),
+                              flushes=(0 if buffered else None)),
+                    axis)
+            if axis is None:
                 def block_body(phi, pool_state, sched, batch):
+                    phi = pin_phi(phi)
                     masks, chunk_ids = mask_state(phi)
                     (phi, pool_state), losses = jax.lax.scan(
                         make_pooled_round_fn(masks, chunk_ids),
                         (phi, pool_state), (sched, batch))
-                    return phi, pool_state, losses
+                    return pin_phi(phi), pool_state, losses
             else:
                 def block_body(phi, pool_state, sched, batch):
                     masks, chunk_ids = mask_state(phi)
@@ -874,14 +961,7 @@ class _BlockRunner:
                     return phi, pool_state, jax.lax.psum(losses, axis)
 
             body = block_body
-            if mesh is not None:
-                state_spec = pool_state_specs(
-                    PoolState(0, 0, 0,
-                              buf_updates=(0 if buffered else None),
-                              buf_round=(0 if buffered else None),
-                              buf_count=(0 if buffered else None),
-                              flushes=(0 if buffered else None)),
-                    axis)
+            if axis is not None:
                 body = shard_map_compat(
                     block_body, mesh=mesh,
                     in_specs=(P(), state_spec, sched_spec(),
@@ -896,17 +976,18 @@ class _BlockRunner:
             self._jit = jax.jit(run_block, donate_argnums=(0, 1))
         else:
             def block_body(phi, sched, batch):
+                phi = pin_phi(phi)
                 masks, chunk_ids = mask_state(phi)
                 phi, losses = jax.lax.scan(make_round_fn(masks, chunk_ids),
                                            phi, (sched, batch))
-                if mesh is not None:
+                if axis is not None:
                     # per-round losses were shard-local partial sums;
                     # one (rounds,)-vector all-reduce per block
                     losses = jax.lax.psum(losses, axis)
-                return phi, losses
+                return pin_phi(phi), losses
 
             body = block_body
-            if mesh is not None:
+            if axis is not None:
                 body = shard_map_compat(
                     block_body, mesh=mesh,
                     in_specs=(P(), sched_spec(), P(None, axis)),
@@ -986,25 +1067,29 @@ def _block_runner(strategy, beta, channel: CommChannel,
                   scheduled: bool = False, pooled: bool = False,
                   buffered: Optional[BufferedAggregation] = None,
                   mesh: Optional[Mesh] = None,
-                  masked: Optional[bool] = None) -> _BlockRunner:
+                  masked: Optional[bool] = None,
+                  partitioner=None) -> _BlockRunner:
     """Strategies and channels are frozen dataclasses, so identically-
     configured runs (every test/bench re-entry) reuse one jitted runner
     instead of recompiling per call; ``scheduled`` (the policy's static
-    schedule shape), ``pooled``, the ``buffered`` config, and the
-    ``mesh`` are part of the key. A Mesh hashes over its device list
-    and axis names, so a runner traced for one device topology can
-    NEVER be served for another (a 4-device and an 8-device mesh are
-    distinct keys, and jax.devices() cannot change within a process for
-    the mesh=None entries). Unhashable custom strategies still work —
-    they pay a fresh trace per run, counted and logged so sweeps
-    notice."""
+    schedule shape), ``pooled``, the ``buffered`` config, the
+    ``partitioner`` (2-D-mesh runs: phi's model-axis layout is part of
+    the traced program, so two partitionings never share an
+    executable), and the ``mesh`` are part of the key. A Mesh hashes
+    over its device list and axis names, so a runner traced for one
+    device topology can NEVER be served for another (a 4-device and an
+    8-device mesh are distinct keys, a 1-D and a 2-D mesh over the same
+    devices differ in axis names, and jax.devices() cannot change
+    within a process for the mesh=None entries). Unhashable custom
+    strategies still work — they pay a fresh trace per run, counted and
+    logged so sweeps notice."""
     masked = bool(scheduled) if masked is None else bool(masked)
     key = (strategy, float(beta), channel, bool(scheduled), bool(pooled),
-           buffered, masked, mesh)
+           buffered, masked, partitioner, mesh)
 
     def build():
         return _BlockRunner(strategy, beta, channel, scheduled, pooled,
-                            buffered, mesh, masked)
+                            buffered, mesh, masked, partitioner)
 
     try:
         return _RUNNER_CACHE.get(key, build)
@@ -1061,7 +1146,8 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
                   sampling: Optional[SamplingPolicy] = None,
                   pool: Optional[ClientPool] = None,
                   buffered: Optional[BufferedAggregation] = None,
-                  mesh=None, ckpt_dir: Optional[str] = None,
+                  mesh=None, partitioner=None,
+                  ckpt_dir: Optional[str] = None,
                   ckpt_every: int = 10, ckpt_keep: int = 3,
                   ckpt_async: bool = True, resume: bool = False,
                   tracker=None) -> Dict:
@@ -1189,7 +1275,30 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             f"{type(channel).__name__}(dtype={channel.dtype!r}, "
             f"simulates_quantization={channel.simulates_quantization})")
     mesh = _resolve_mesh(mesh)
-    shards = int(mesh.devices.size) if mesh is not None else 1
+    # the cohort is split over the CLIENTS axis extent only; on a 2-D
+    # (clients, model) mesh the model axis splits phi's weight
+    # matrices, not the cohort
+    shards = int(mesh.shape[CLIENT_AXIS]) if mesh is not None else 1
+    model_sharded = _model_sharded(mesh)
+    if model_sharded:
+        from repro.runtime.sharding import DEFAULT_PARTITIONER
+        if partitioner is None:
+            partitioner = DEFAULT_PARTITIONER
+        if getattr(strategy, "payload_dtype", "float32") == "int8":
+            raise ValueError(
+                f"{type(strategy).__name__} uplinks NATIVE int8 trees "
+                f"whose per-tensor quantization grids assume each "
+                f"parameter tensor is whole on every device; a 2-D "
+                f"('{CLIENT_AXIS}', '{MODEL_AXIS}') mesh shards phi's "
+                f"weight matrices — run int8 strategies on a 1-D "
+                f"'{CLIENT_AXIS}' mesh (or mesh=None) instead")
+    elif partitioner is not None:
+        raise ValueError(
+            f"partitioner= only applies to a 2-D ('{CLIENT_AXIS}', "
+            f"'{MODEL_AXIS}') mesh (build one with "
+            f"repro.runtime.sharding.client_model_mesh); this run's mesh "
+            f"is {'1-D' if mesh is not None else 'None'} and phi stays "
+            f"replicated")
     # a mesh spanning >1 process (jax.distributed) changes only HOW
     # arrays move: every process runs this same host loop on the same
     # seed (plans, rng draws, and bills are process-replicated), each
@@ -1227,13 +1336,19 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     # weight 0, zero batch) so every device sees an equal shard and the
     # validity-mask machinery keeps them inert
     c_pad = -(-clients_per_round // shards) * shards
+    # pool-state LAYOUT: the 1-D manual shard_map body needs the
+    # per-shard layout (per-shard FedBuff slabs, (shards,) local fill
+    # levels); the 2-D GSPMD route runs the GLOBAL body, which sees the
+    # whole state like a flat run does — build the shards == 1 layout
+    # and let the committed input shardings split it
+    state_shards = 1 if model_sharded else shards
     # residency="host" pools keep the (N,) identity arrays in host
     # slabs; the device carries only a fixed gathered WINDOW of the
     # rows each block actually touches (O(block cohort), not O(N)) —
     # the producer remaps cohort indices window-local, the consumer
     # stages the window before each block and scatters it back after
     host_resident = pooled and pool.residency == "host"
-    slabs = pool.init_slabs(shards=shards) if host_resident else None
+    slabs = pool.init_slabs(shards=state_shards) if host_resident else None
     rng = np.random.default_rng(seed)
     # private copy: the block runner donates its phi argument, and the
     # caller's init_params must stay usable (they are reused across runs)
@@ -1252,13 +1367,13 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
     budget = int(strategy.local_step_budget(support))
     run_block = _block_runner(strategy, beta, channel, scheduled,
                               pooled=pooled, buffered=buffered, mesh=mesh,
-                              masked=masked)
+                              masked=masked, partitioner=partitioner)
     # FedBuff buffers stage whatever the strategy uplinks — sized from
     # its template so quantized strategies buffer int8 trees at int8
     # width, never dequantized copies
     uplink_template = getattr(strategy, "uplink_template", None)
     pool_state = (pool.init_state(
-        phi, c_pad, buffered, shards=shards,
+        phi, c_pad, buffered, shards=state_shards,
         template=uplink_template(phi) if uplink_template else None)
         if pooled else None)
     if ckpt_dir is not None:
@@ -1274,6 +1389,14 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
         fingerprint = {
             "seed": int(seed), "clients_per_round": int(clients_per_round),
             "support": int(support), "shards": int(shards),
+            # full mesh topology + partitioning identity: a snapshot of
+            # model-sharded (or differently-mesh-shaped) phi must never
+            # silently resume into a run with a different layout
+            "mesh": (",".join(f"{a}:{int(mesh.shape[a])}"
+                              for a in mesh.axis_names)
+                     if mesh is not None else ""),
+            "partitioner": partitioner.name if partitioner is not None
+            else "",
             "strategy": type(strategy).__name__,
             "pool_size": int(pool.size) if pooled else 0,
             "pool_sampler": pool.sampler if pooled else "",
@@ -1331,9 +1454,10 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             np.arange(n_full),
             {f: np.asarray(getattr(pool_state, f))
              for f in ClientPool.SLAB_FIELDS})
-        slab_rows = min(n_full, -(-pad * c_pad // shards) * shards)
+        slab_rows = min(n_full,
+                        -(-pad * c_pad // state_shards) * state_shards)
         win = pool.init_state(
-            phi, c_pad, buffered, shards=shards,
+            phi, c_pad, buffered, shards=state_shards,
             template=uplink_template(phi) if uplink_template else None,
             rows=slab_rows)
         # identity rows are re-staged from the slabs every block; the
@@ -1344,13 +1468,28 @@ def run_federated(init_params, task_dist: TaskDistribution, strategy, *,
             pool_state.buf_updates, pool_state.buf_round,
             pool_state.buf_count, pool_state.flushes)
     if mesh is not None:
-        phi = jax.device_put(phi, NamedSharding(mesh, P()))
+        # 1-D mesh: phi fully replicated. 2-D mesh: each leaf carries
+        # the partitioner's NamedSharding — weight matrices split on
+        # the model axis, norms/biases replicated — and stays that way
+        # through the whole run (aggregation psums over the clients
+        # axis leave the model-axis shards in place; phi is never
+        # gathered whole onto one device)
+        phi = jax.device_put(
+            phi, partitioner.shardings(phi, mesh) if model_sharded
+            else NamedSharding(mesh, P()))
     if mesh is not None and pooled:
+        # 1-D manual route: rows and FedBuff slabs are device_put in
+        # shard_map's layout. 2-D GSPMD route: the flat-layout state is
+        # staged replicated (rows are O(N) int32, not padded to the
+        # clients extent) and the compiler re-shards inside the block
+        # as the client-phase shardings dictate.
         pool_state = stage_tree(
             jax.tree.map(np.asarray, pool_state) if multiproc
             else pool_state,
             jax.tree.map(lambda s: NamedSharding(mesh, s),
-                         pool_state_specs(pool_state, CLIENT_AXIS),
+                         (jax.tree.map(lambda _: P(), pool_state)
+                          if model_sharded
+                          else pool_state_specs(pool_state, CLIENT_AXIS)),
                          is_leaf=lambda x: isinstance(x, P)))
 
     def ckpt_at(end):

@@ -553,7 +553,11 @@ def pool_state_specs(state: PoolState, axis: str) -> PoolState:
         buf_updates=(None if state.buf_updates is None else
                      jax.tree.map(lambda _: sharded, state.buf_updates)),
         buf_round=None if state.buf_round is None else sharded,
-        buf_count=None if state.buf_count is None else sharded,
+        # shards == 1 layout (also the 2-D GSPMD route) keeps a SCALAR
+        # fill counter — replicate it; the mesh layout's (shards,)
+        # vector of local fill levels splits like the rows
+        buf_count=(None if state.buf_count is None else
+                   (sharded if jnp.ndim(state.buf_count) else P())),
         flushes=None if state.flushes is None else P())
 
 

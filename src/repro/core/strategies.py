@@ -75,31 +75,25 @@ def weighted_client_mean(trees, weights, axis_name=None):
     likewise), and the local partial sum is all-reduced across the
     named mesh axis. Because the weights are normalized over the FULL
     cohort, psum of the per-shard partial sums IS the global weighted
-    mean. The per-leaf partials are flattened and concatenated into ONE
-    psum — XLA CPU (and most backends) execute each all-reduce as its
-    own synchronization, so a per-leaf psum would pay one cross-device
-    rendezvous per parameter tensor per round; bitwise the same sums
-    either way."""
+    mean. The per-leaf partials go through ONE multi-operand ``psum``
+    (a single psum primitive bind over the whole tree -> a single
+    all-reduce) — XLA CPU (and most backends) execute each all-reduce
+    as its own synchronization, so per-leaf psum CALLS would pay one
+    cross-device rendezvous per parameter tensor per round. The
+    per-leaf form (vs the old flatten-and-concatenate into one vector)
+    sums the same elements in the same cross-device order — bitwise
+    identical — while preserving each leaf's shape AND sharding: on a
+    2-D (clients, model) mesh the partials of model-sharded leaves
+    reduce over the clients axis IN PLACE, where the concat would
+    force an all-gather of every shard onto every device."""
     def local_sum(q):
         qf = q.astype(jnp.float32)
         w = weights.reshape((-1,) + (1,) * (qf.ndim - 1))
         return jnp.sum(w * jnp.where(w > 0, qf, 0.0), axis=0)
     local = jax.tree.map(local_sum, trees)
-    if axis_name is None:
+    if axis_name is None or not jax.tree.leaves(local):
         return local
-    leaves, treedef = jax.tree.flatten(local)
-    if not leaves:
-        return local
-    if len(leaves) == 1:
-        return jax.tree.unflatten(treedef,
-                                  [jax.lax.psum(leaves[0], axis_name)])
-    flat = jax.lax.psum(
-        jnp.concatenate([l.ravel() for l in leaves]), axis_name)
-    out, off = [], 0
-    for l in leaves:
-        out.append(flat[off:off + l.size].reshape(l.shape))
-        off += l.size
-    return jax.tree.unflatten(treedef, out)
+    return jax.lax.psum(local, axis_name)
 
 
 def reptile_aggregate(phi, phi_hats, alpha_t, *,
@@ -575,8 +569,9 @@ class TifedStrategy(FedStrategy):
                                   beta, weights, axis_name=None):
         """Quantization-aware weighted aggregation: dequantize each
         client's int8 tree, weighted-mean in the SAME single fused psum
-        as the fp32 strategies (the dequantized leaves concatenate into
-        weighted_client_mean's one all-reduce), Reptile-interpolate,
+        as the fp32 strategies (the dequantized leaves join
+        weighted_client_mean's one multi-operand all-reduce),
+        Reptile-interpolate,
         requantize phi back onto the integer grid."""
         deq = jax.vmap(tifed_dequantize)(client_results)
         mean = weighted_client_mean(deq, weights, axis_name=axis_name)

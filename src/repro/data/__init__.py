@@ -1,3 +1,4 @@
 from repro.data.tasks import (KWSTasks, OmniglotTasks, SineTasks,  # noqa: F401
                               TaskDistribution)
-from repro.data.lm import LMClientStream  # noqa: F401
+from repro.data.lm import (LMClientStream, LmTaskDistribution,  # noqa: F401
+                           lm_loss)

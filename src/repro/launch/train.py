@@ -2,11 +2,16 @@
 --arch over heterogeneous synthetic LM clients, with checkpointing.
 
 ``--strategy reptile|fedavg|fedsgd|transfer|tifed`` switches to the
-round engine (repro.core.run_federated) on the paper's sine workload
-instead — ``tifed`` runs TIFeD integer-only int8 local training with
-native int8 uplink billing; ``--devices N`` there shards the client
-axis over a mesh. Incompatible flag combos (e.g. ``--strategy transfer
---buffer-size``) are rejected at parse time.
+round engine (repro.core.run_federated) — by default on the paper's
+sine workload; ``--arch transformer|mamba2|moe`` swaps in next-token
+personalization of the family's reduced config over heterogeneous LM
+clients. ``tifed`` runs TIFeD integer-only int8 local training with
+native int8 uplink billing. ``--devices N`` (or ``--mesh clients:K``)
+shards the client axis over a 1-D mesh; ``--mesh clients:K,model:M``
+builds the 2-D (clients, model) mesh — cohort split K ways AND phi's
+weight matrices split M ways per the family's ModelPartitioner.
+Incompatible flag combos (e.g. ``--strategy transfer --buffer-size``,
+``tifed`` with a model-sharded mesh) are rejected at parse time.
 
 The fleet is persistent (one ``LMClientStream`` per client id).
 ``--participation`` thins check-ins i.i.d.; ``--availability
@@ -81,6 +86,44 @@ def positive_int_arg(s: str) -> int:
 
 ENGINE_STRATEGIES = ("reptile", "fedavg", "fedsgd", "transfer", "tifed")
 
+#: engine-path --arch family keywords -> canonical arch configs (run
+#: REDUCED there: the engine trains every cohort client per round, so
+#: the full configs are far beyond this container); each family also
+#: names a registered ModelPartitioner for --mesh clients:K,model:M
+ARCH_FAMILIES = {"transformer": "tinyllama-1.1b",
+                 "mamba2": "mamba2-130m",
+                 "moe": "mixtral-8x22b"}
+
+
+def mesh_arg(s: str):
+    """argparse type for --mesh: the LM launcher keywords
+    ('none'|'data'|'pod') pass through; an engine mesh spec
+    'clients:K[,model:M]' parses to a {'clients': K[, 'model': M]}
+    dict — rejected AT PARSE TIME on malformed axis names/extents."""
+    if s in ("none", "data", "pod"):
+        return s
+    spec = {}
+    for part in s.split(","):
+        name, sep, extent = part.partition(":")
+        if not sep or name not in ("clients", "model") or name in spec:
+            raise argparse.ArgumentTypeError(
+                f"expected 'none', 'data', 'pod', or "
+                f"'clients:K[,model:M]', got {s!r}")
+        try:
+            v = int(extent)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"mesh axis extent must be an integer, got {extent!r}")
+        if v < 1:
+            raise argparse.ArgumentTypeError(
+                f"mesh axis extent must be >= 1, got {v}")
+        spec[name] = v
+    if "clients" not in spec:
+        raise argparse.ArgumentTypeError(
+            f"an engine mesh spec needs a clients axis: "
+            f"'clients:K[,model:M]', got {s!r}")
+    return spec
+
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
@@ -91,9 +134,16 @@ def parse_args(argv=None):
                          "(repro.core.run_federated) on the paper's sine "
                          "workload — 'tifed' is integer-only int8 local "
                          "training with native int8 uplinks")
-    ap.add_argument("--arch", choices=list(ALL_ARCHS),
-                    help="LM architecture (tinyreptile launcher only; "
-                         "engine strategies train the paper sine MLP)")
+    ap.add_argument("--arch",
+                    choices=list(ALL_ARCHS) + sorted(ARCH_FAMILIES),
+                    help="LM architecture. Canonical names "
+                         "(tinyllama-1.1b, ...) run the tinyreptile LM "
+                         "launcher; the family keywords "
+                         "transformer|mamba2|moe ALSO work with engine "
+                         "strategies (--strategy reptile|...), which "
+                         "then meta-train the reduced config over "
+                         "heterogeneous LM clients instead of the paper "
+                         "sine MLP")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--batch", type=int, default=8)
@@ -140,16 +190,20 @@ def parse_args(argv=None):
                          "when --mesh is set; CPU runs force host "
                          "devices via XLA_FLAGS="
                          "--xla_force_host_platform_device_count)")
-    ap.add_argument("--mesh", default="none",
-                    choices=("none", "data", "pod"),
+    ap.add_argument("--mesh", default="none", type=mesh_arg,
                     help="shard the round across devices: 'data' runs "
                          "the fused cohort step on a 1-D data mesh "
                          "(batch split, GSPMD-sharded model); 'pod' "
                          "treats each device as one federated pod "
                          "client (repro.core.federated pod-client "
                          "mode: inner SGD per pod, one cross-pod "
-                         "all-reduce per round); 'none' (default) "
-                         "stays single-device")
+                         "all-reduce per round); 'clients:K[,model:M]' "
+                         "runs an engine strategy on a 1-D client mesh "
+                         "(K-way cohort split) or a 2-D (clients, "
+                         "model) mesh (phi's weight matrices "
+                         "additionally split M ways per the family's "
+                         "ModelPartitioner); 'none' (default) stays "
+                         "single-device")
     ap.add_argument("--coordinator", default=None,
                     help="jax.distributed coordinator address host:port "
                          "for multi-process runs; required with "
@@ -203,21 +257,48 @@ def parse_args(argv=None):
         if args.arch is None:
             ap.error("--arch is required for the tinyreptile LM launcher "
                      "(engine strategies --strategy "
-                     f"{'|'.join(ENGINE_STRATEGIES)} pick the paper sine "
-                     "workload instead)")
+                     f"{'|'.join(ENGINE_STRATEGIES)} default to the "
+                     "paper sine workload instead)")
+        if isinstance(args.mesh, dict):
+            ap.error("--mesh clients:K[,model:M] drives the round "
+                     "engine; pass an engine --strategy "
+                     f"({'|'.join(ENGINE_STRATEGIES)})")
         if args.devices is not None and args.mesh == "none":
             ap.error("--devices only applies with --mesh data|pod (or "
                      "with an engine --strategy, where it sizes the "
                      "client mesh)")
+        # family keyword -> the canonical config it names
+        args.arch = ARCH_FAMILIES.get(args.arch, args.arch)
         return args
-    if args.arch is not None:
-        ap.error(f"--strategy {args.strategy} runs the round engine on "
-                 f"the paper sine workload; --arch selects the LM "
-                 f"launcher — pass one or the other")
-    if args.mesh != "none":
+    if args.arch is not None and args.arch not in ARCH_FAMILIES:
+        ap.error(f"--strategy {args.strategy} meta-trains a reduced LM "
+                 f"family (--arch {'|'.join(sorted(ARCH_FAMILIES))}) or, "
+                 f"without --arch, the paper sine MLP; the canonical "
+                 f"config {args.arch!r} runs the tinyreptile LM launcher")
+    if args.arch is not None and args.strategy == "tifed":
+        ap.error("--strategy tifed runs TIFeD integer-only training on "
+                 "the paper's ReLU sine net; the LM families are fp32 — "
+                 "drop --arch")
+    if args.mesh in ("data", "pod"):
         ap.error(f"--strategy {args.strategy} shards the client axis "
-                 f"via --devices N alone; --mesh data|pod belongs to "
-                 f"the LM launcher")
+                 f"via --devices N or --mesh clients:K[,model:M]; "
+                 f"--mesh data|pod belongs to the LM launcher")
+    if isinstance(args.mesh, dict):
+        spec = ",".join(f"{k}:{v}" for k, v in args.mesh.items())
+        if args.devices is not None:
+            ap.error(f"--mesh {spec} already sizes the client mesh; "
+                     f"drop --devices")
+        if "model" in args.mesh and args.strategy == "tifed":
+            ap.error("--strategy tifed uplinks NATIVE int8 trees whose "
+                     "quantization grids need each parameter tensor "
+                     "whole on every device; a model-sharded mesh "
+                     "splits them — use --mesh clients:K (no model "
+                     "axis)")
+        need = args.mesh["clients"] * args.mesh.get("model", 1)
+        if need > len(jax.devices()):
+            ap.error(f"--mesh {spec} needs {need} devices; only "
+                     f"{len(jax.devices())} visible (force host devices "
+                     f"via XLA_FLAGS)")
     if args.strategy == "transfer" and args.buffer_size:
         ap.error("--strategy transfer uplinks raw client batches "
                  "(uplink_ref='none'); the FedBuff buffer stages "
@@ -249,9 +330,14 @@ def run_engine_strategy(args):
     run (repro.core.run_federated) on the paper's sine workload, with
     the launcher's fleet flags mapped onto the engine's plugins
     (--pool-size -> ClientPool, --participation/--availability ->
-    SamplingPolicy, --buffer-size -> BufferedAggregation, --devices ->
-    client mesh). tifed runs integer-only local training and bills its
-    native int8 uplinks; everything else is the fp32 engine path.
+    SamplingPolicy, --buffer-size -> BufferedAggregation, --devices or
+    --mesh clients:K[,model:M] -> client / client-model mesh). tifed
+    runs integer-only local training and bills its native int8 uplinks;
+    everything else is the fp32 engine path. --arch
+    transformer|mamba2|moe swaps the sine workload for next-token
+    personalization of the family's REDUCED config over heterogeneous
+    LM clients (LmTaskDistribution); with a model axis on the mesh, phi
+    is sharded per the family's registered ModelPartitioner.
     --ckpt-dir arms the engine's round-state snapshotter (background
     writer, every --ckpt-every rounds) and --resume continues a
     preempted run bit-for-bit — including past the original --rounds
@@ -263,11 +349,43 @@ def run_engine_strategy(args):
     from repro.core.strategies import (FedAvgStrategy, FedSGDStrategy,
                                        ReptileStrategy, TifedStrategy,
                                        TransferStrategy)
-    from repro.data import SineTasks
+    from repro.data import LmTaskDistribution, SineTasks, lm_loss
     from repro.models.paper_nets import (init_paper_model, paper_model_loss,
                                          relu_mlp_loss)
+    from repro.runtime.sharding import client_model_mesh, partitioner_for
 
-    loss = functools.partial(paper_model_loss, SINE_MLP)
+    if args.arch is not None:
+        # family keyword -> the canonical config, reduced for the
+        # engine's every-client-every-round cost profile
+        cfg = get_arch(ARCH_FAMILIES[args.arch]).reduced()
+        model = build_model(cfg)
+        loss = lm_loss(model)
+        dist = LmTaskDistribution(cfg.vocab_size, args.seq)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        support = args.batch
+        eval_kwargs = dict(num_tasks=2, support=4, k_steps=4, lr=0.01,
+                           query=8)
+    else:
+        loss = functools.partial(paper_model_loss, SINE_MLP)
+        dist = SineTasks()
+        params = init_paper_model(SINE_MLP, jax.random.PRNGKey(args.seed))
+        support = 32
+        # eval finetune rate: the tanh paper net takes 0.02; tifed's
+        # ReLU net diverges there at k_steps 16 — 0.005 is safe
+        eval_kwargs = dict(num_tasks=5, support=10, k_steps=16,
+                           lr=0.005 if args.strategy == "tifed" else 0.02,
+                           query=20)
+    mesh = args.devices
+    partitioner = None
+    if isinstance(args.mesh, dict):
+        if "model" in args.mesh:
+            mesh = client_model_mesh(args.mesh["clients"],
+                                     args.mesh["model"])
+            # the family's registered partitioner; the sine MLP takes
+            # the default matrix-sharding rules
+            partitioner = partitioner_for(args.arch or "default")
+        else:
+            mesh = args.mesh["clients"]     # 1-D client mesh
     strategy = {
         "reptile": lambda: ReptileStrategy(loss, epochs=8),
         "fedavg": lambda: FedAvgStrategy(loss, epochs=8),
@@ -277,8 +395,6 @@ def run_engine_strategy(args):
     }[args.strategy]()
     channel = (CommChannel("int8", quantize=False)
                if args.strategy == "tifed" else CommChannel())
-    dist = SineTasks()
-    params = init_paper_model(SINE_MLP, jax.random.PRNGKey(args.seed))
     pool = (ClientPool(dist, args.pool_size, seed=args.seed,
                        sampler=args.pool_sampler,
                        residency=args.pool_residency)
@@ -295,22 +411,22 @@ def run_engine_strategy(args):
         sampling = None
     buffered = (BufferedAggregation(args.buffer_size)
                 if args.buffer_size else None)
-    # eval finetune rate: the tanh paper net takes 0.02; tifed's ReLU
-    # net diverges there at k_steps 16 — 0.005 is safe for both
-    eval_lr = 0.005 if args.strategy == "tifed" else 0.02
     t0 = time.time()
     out = run_federated(
         params, dist, strategy, rounds=args.rounds,
         clients_per_round=args.clients, alpha=args.alpha, beta=args.beta,
-        support=32, seed=args.seed, eval_every=args.rounds,
-        eval_kwargs=dict(num_tasks=5, support=10, k_steps=16, lr=eval_lr,
-                         query=20),
+        support=support, seed=args.seed, eval_every=args.rounds,
+        eval_kwargs=eval_kwargs,
         channel=channel, sampling=sampling, pool=pool, buffered=buffered,
-        mesh=args.devices, ckpt_dir=args.ckpt_dir,
+        mesh=mesh, partitioner=partitioner, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, resume=args.resume)
     jax.block_until_ready(jax.tree.leaves(out["params"])[0])
     row = {"strategy": args.strategy, "rounds": args.rounds,
            "clients": args.clients, "dt_s": round(time.time() - t0, 3)}
+    if args.arch is not None:
+        row["arch"] = args.arch
+    if isinstance(args.mesh, dict):
+        row["mesh"] = ",".join(f"{k}:{v}" for k, v in args.mesh.items())
     if out["history"]:
         row["query_loss"] = round(float(out["history"][-1]["query_loss"]),
                                   4)

@@ -9,6 +9,8 @@ The chunked scan is also implemented as a Pallas TPU kernel
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -133,9 +135,72 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk, initial_state=None):
     return y.astype(x.dtype), final_state
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ssd_pallas(chunk, interpret, x, dt, A, Bm, Cm):
+    """Kernel forward for ``ssd_chunked_pallas``: exactly
+    ``ssd_chunked``'s dt-scaling and chunk reshapes, laid out for the
+    kernel's (B, H, nc) grid, zero initial state."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S = x.shape[1]
+    nc = S // chunk
+
+    xd = (x * dt[..., None]).astype(jnp.float32)             # (b,S,h,p)
+    dA = (dt * A).astype(jnp.float32)                        # (b,S,h)
+    xk = xd.reshape(b, nc, chunk, h, p).transpose(0, 3, 1, 2, 4)
+    dAk = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)
+    Bk = Bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Ck = Cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    # call-time import so tests can wrap/count the kernel entry point
+    from repro.kernels.ssd_scan import ssd_scan
+    y = ssd_scan(xk, dAk, Bk, Ck, interpret=interpret)       # f32
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, S, h, p)[:, :s]
+    return y.astype(x.dtype)
+
+
+def _ssd_pallas_fwd(chunk, interpret, x, dt, A, Bm, Cm):
+    return _ssd_pallas(chunk, interpret, x, dt, A, Bm, Cm), (x, dt, A,
+                                                             Bm, Cm)
+
+
+def _ssd_pallas_bwd(chunk, interpret, res, g):
+    # backward through the jnp oracle (the same math the kernel
+    # computes): pallas_call has no transpose rule, and the oracle's
+    # VJP is exactly the kernel forward's derivative
+    del interpret
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(
+        lambda x, dt, A, Bm, Cm: ssd_chunked(x, dt, A, Bm, Cm, chunk)[0],
+        x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+_ssd_pallas.defvjp(_ssd_pallas_fwd, _ssd_pallas_bwd)
+
+
+def ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk, *, interpret=None):
+    """The chunked SSD scan routed through the Pallas kernel
+    (repro.kernels.ssd_scan; interpret mode off-TPU). Forward runs the
+    kernel — the inter-chunk state carried in VMEM scratch, never the
+    (S, S) semiseparable matrix — and the backward pass differentiates
+    the jnp oracle (``ssd_chunked``), which computes the same math.
+    Returns y only; the train/prefill path discards the final state."""
+    return _ssd_pallas(chunk, interpret, x, dt, A, Bm, Cm)
+
+
 def mamba_block(params, x, *, d_state, head_dim, expand, conv_width, chunk,
                 norm_eps=1e-5):
-    """Full Mamba2 block forward (train/prefill). x: (B, S, d)."""
+    """Full Mamba2 block forward (train/prefill). x: (B, S, d).
+
+    The SSD scan runs the jnp oracle by default; the ``ssd_pallas``
+    feature flag (repro.runtime.flags) routes it through the Pallas
+    kernel — the federated LM hot path's compute kernel."""
     B, S, d = x.shape
     d_inner, nheads, conv_dim = mamba_dims(d, expand, head_dim, d_state)
     z = x @ params["w_z"]
@@ -151,7 +216,11 @@ def mamba_block(params, x, *, d_state, head_dim, expand, conv_width, chunk,
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
     xh = xin.reshape(B, S, nheads, head_dim)
-    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    from repro.runtime.flags import feature
+    if feature("ssd_pallas"):
+        y = ssd_chunked_pallas(xh, dt, A, Bm, Cm, chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
     y = y + xh * params["D"][None, None, :, None].astype(xh.dtype)
     y = y.reshape(B, S, d_inner)
     y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], norm_eps)

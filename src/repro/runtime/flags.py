@@ -57,7 +57,13 @@ def probe_scope(on: bool = True):
 #            count, e.g. llama4's H=40 that 16 cannot divide; avoids
 #            GSPMD's replicate-then-partition copies of S^2 scores).
 
-_FEATURES = ("gqa_flat", "banded", "moe2d", "ringkv", "moelocal", "seqpar")
+# ssd_pallas : route mamba2's chunked SSD scan through the Pallas kernel
+#            (repro.kernels.ssd_scan) on the train/prefill path —
+#            interpret mode off-TPU, so federated mamba2 inner loops
+#            exercise the kernel everywhere (see models.mamba2).
+
+_FEATURES = ("gqa_flat", "banded", "moe2d", "ringkv", "moelocal",
+             "seqpar", "ssd_pallas")
 
 
 def feature(name: str) -> bool:

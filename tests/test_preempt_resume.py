@@ -300,6 +300,25 @@ def test_resume_fingerprint_mismatch_rejected(sine_setup):
                           ckpt_every=2, resume=True, **kw)
 
 
+def test_resume_mesh_layout_mismatch_rejected(sine_setup):
+    """A snapshot taken under one mesh layout never silently resumes
+    into another: the fingerprint pins the full mesh topology (axis
+    names + extents) and the ModelPartitioner identity, so a flat (or
+    1-D) checkpoint cannot feed a 2-D model-sharded run. A 1x1
+    ("clients", "model") mesh makes this checkable on one device."""
+    from repro.runtime.sharding import client_model_mesh
+    params, dist, strategy = sine_setup
+    kw = dict(rounds=4, beta=0.02, support=6, seed=5, eval_every=2,
+              eval_kwargs=EVAL)
+    with tempfile.TemporaryDirectory() as d:
+        run_federated(params, dist, strategy, ckpt_dir=d, ckpt_every=2,
+                      ckpt_async=False, **kw)
+        with pytest.raises(ValueError, match="different run config"):
+            run_federated(params, dist, strategy, ckpt_dir=d,
+                          ckpt_every=2, resume=True,
+                          mesh=client_model_mesh(1, 1), **kw)
+
+
 def test_resume_shrunk_horizon_rejected(sine_setup):
     params, dist, strategy = sine_setup
     kw = dict(beta=0.02, support=6, seed=5, eval_every=2, eval_kwargs=EVAL)
